@@ -1,0 +1,80 @@
+"""Quickstart: the SEAL pipeline end to end in 60 seconds on CPU.
+
+1. build a model, 2. rank weights by criticality (SE), 3. seal them with
+ColoE, 4. show the storage/traffic report, 5. decrypt-on-use inference that
+matches plaintext inference exactly, 6. the fused Pallas kernel.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SealConfig
+from repro.configs import get_reduced
+from repro.core import plan as P
+from repro.core.sealed_store import SealedParams, seal_params, sealed_byte_report, unseal_params
+from repro.kernels import ops
+from repro.models import transformer as T
+
+KEY = bytes(range(32))
+
+
+def main():
+    print("== 1. model ==")
+    cfg = get_reduced("internlm2_1_8b").with_(num_layers=8)
+    params = T.init_params(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.2f}M")
+
+    print("\n== 2. criticality-aware Smart Encryption plan (paper §3.1) ==")
+    seal = SealConfig(mode="coloe", smart_ratio=0.5)
+    plans = P.make_plan(params, seal)
+    tot = P.plan_totals(plans)
+    print(f"encrypted fraction at ratio {seal.smart_ratio}: "
+          f"{tot['enc_fraction']:.3f} "
+          f"({tot['enc_bytes']/1e6:.2f} of {tot['total_bytes']/1e6:.2f} MB)")
+
+    print("\n== 3. seal with ColoE (counters colocated, paper §3.2) ==")
+    sp = seal_params(params, seal, KEY)
+    rep = sealed_byte_report(sp)
+    print(f"stored bytes: {rep['stored_bytes']/1e6:.2f} MB "
+          f"(+{rep['overhead']*100:.2f}% inline counter area — the paper's "
+          f"136B-line layout)")
+
+    print("\n== 4. decrypt-on-use inference matches plaintext exactly ==")
+    batch = {"tokens": jnp.arange(32).reshape(1, 32) % cfg.vocab_size,
+             "targets": jnp.zeros((1, 32), jnp.int32)}
+    loss_plain, _ = T.forward(cfg, params, batch)
+
+    @jax.jit
+    def sealed_forward(buffers):
+        sp2 = SealedParams(buffers, sp.metas, sp.plans, sp.treedef, sp.seal)
+        p = unseal_params(sp2, KEY)
+        return T.forward(cfg, p, batch)[0]
+
+    loss_sealed = sealed_forward(sp.buffers)
+    print(f"plaintext loss={float(loss_plain):.6f} "
+          f"sealed loss={float(loss_sealed):.6f} "
+          f"equal={bool(jnp.allclose(loss_plain, loss_sealed))}")
+
+    print("\n== 5. fused decrypt+matmul Pallas kernel (zero extra HBM) ==")
+    kw = jnp.asarray(np.frombuffer(KEY, np.uint32))
+    nonce = jnp.asarray(np.array([1, 2, 3], np.uint32))
+    w = jax.random.normal(jax.random.key(1), (256, 256), jnp.float32)
+    x = jax.random.normal(jax.random.key(2), (64, 256), jnp.float32)
+    mask = jnp.arange(256) < 128          # SE: top half encrypted
+    wct = ops.seal_weights(w, kw, nonce, row_mask=mask)
+    y = ops.sealed_matmul(x, wct, mask, kw, nonce)
+    print(f"fused kernel max err vs plain matmul: "
+          f"{float(jnp.max(jnp.abs(y - x @ w))):.2e}")
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Sealed serving: batched requests against ciphertext-resident weights —
+the paper's edge-inference scenario. Shows that SEAL-encrypted weights
+produce byte-identical generations while the stored image is ciphertext,
+and compares the four memory-encryption modes.
+
+Run: PYTHONPATH=src python examples/sealed_serving.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.config import SealConfig
+from repro.configs import get_reduced
+from repro.core.sealed_store import sealed_byte_report
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = get_reduced("granite_3_2b").with_(dtype="float32")
+    params = T.init_params(cfg, jax.random.key(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=12) for _ in range(6)]
+
+    results = {}
+    for mode in ["none", "direct", "counter", "coloe"]:
+        seal = None if mode == "none" else SealConfig(mode=mode, smart_ratio=0.5)
+        eng = ServeEngine(cfg, params, batch_slots=3, max_len=48, seal=seal)
+        for p in prompts:
+            eng.submit(p, max_tokens=8)
+        t0 = time.time()
+        done = eng.run()
+        dt = time.time() - t0
+        outs = tuple(tuple(r.out) for r in sorted(done, key=lambda r: r.rid))
+        results[mode] = outs
+        extra = ""
+        if eng.sealed is not None:
+            rep = sealed_byte_report(eng.sealed)
+            extra = (f" enc_frac={rep['enc_fraction']:.2f}"
+                     f" storage_overhead={rep['overhead']*100:.2f}%")
+        print(f"{mode:8s}: {len(done)} reqs in {dt:5.2f}s "
+              f"({eng.stats['tokens']/dt:6.1f} tok/s){extra}")
+
+    same = all(results[m] == results["none"] for m in results)
+    print(f"\nall modes produce identical generations: {same}")
+    print("first request tokens:", list(results["none"][0])[:8])
+
+
+if __name__ == "__main__":
+    main()

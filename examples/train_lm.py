@@ -1,0 +1,63 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps with the full production stack (sharded data loader, AdamW + cosine,
+remat, sealed async checkpoints, preemption-safe loop, resume).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params; on this CPU container expect ~1-2 s/step. Use --tiny for a
+fast smoke run.)
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.config import ModelConfig, SealConfig, TrainConfig
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.fault import StepWatchdog
+from repro.train.loop import train
+
+
+def lm_100m() -> ModelConfig:
+    """~100M-param llama-style dense LM."""
+    return ModelConfig(
+        name="lm-100m", family="dense", num_layers=8, d_model=640,
+        num_heads=10, num_kv_heads=5, head_dim=64, d_ff=2560,
+        vocab_size=32_000, pattern=("attn",), tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    if args.tiny:
+        cfg = cfg.with_(num_layers=2, d_model=128, d_ff=512, num_heads=4,
+                        num_kv_heads=2, vocab_size=1024)
+        args.steps, args.seq = min(args.steps, 20), 64
+
+    tc = TrainConfig(learning_rate=3e-4, warmup_steps=max(10, args.steps // 10),
+                     total_steps=args.steps, microbatches=2,
+                     checkpoint_every=max(50, args.steps // 4),
+                     checkpoint_dir=args.ckpt)
+    mesh = make_host_mesh(data=1, model=1)
+    params, opt, metrics = train(
+        cfg, tc, mesh, batch=args.batch, seq=args.seq, steps=args.steps,
+        seal=SealConfig(mode="coloe", smart_ratio=0.5),
+        log_path=os.path.join(args.ckpt, "metrics.jsonl"),
+        watchdog=StepWatchdog(hard_limit_s=300))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"trained {cfg.name} ({n/1e6:.1f}M params) for {args.steps} steps: "
+          f"final loss={float(metrics['loss']):.4f} "
+          f"ce={float(metrics['ce']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

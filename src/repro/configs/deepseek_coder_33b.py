@@ -1,0 +1,40 @@
+"""DeepSeek-Coder-33B dense (llama-arch). [arXiv:2401.14196]
+
+62L d_model=7168 56H (GQA kv=8) head_dim=128 d_ff=19200 vocab=32256.
+"""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-coder-33b",
+        family="dense",
+        num_layers=62,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=19_200,
+        vocab_size=32_256,
+        pattern=("attn",),
+        rope_theta=100_000.0,
+        # 56 heads cannot shard over a 16-way TP axis; 8 zero heads (+14%
+        # attention FLOPs) let the S^2 score tensors shard 16-way
+        # (EXPERIMENTS.md §Perf hillclimb 3)
+        pad_heads_to=64,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-reduced",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=256,
+        pattern=("attn",),
+    )

@@ -1,0 +1,65 @@
+"""Colocation-mode (ColoE) line layout — paper §3.2 + Figure 6.
+
+A DRAM line holds 128 B of data; counter-mode encryption needs an 8 B
+counter per line. The paper stores counters in a *separate* region
+(Figure 6a, extra accesses) or colocated in a widened 136 B line backed by
+an ECC-style extra chip (Figure 6b, single access).
+
+TPU adaptation: the "line" becomes a 32-word (128 B) record and the ColoE
+buffer packs [32 data words | counter word | flag word] contiguously, so a
+sealed tensor streams HBM->VMEM as ONE dense DMA; the counter-mode layout
+needs a second (strided) stream for the counter table. The flag word
+carries the paper's emalloc/malloc bit (bit 0: line is encrypted).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+WORDS_PER_LINE = 32          # 128 B of data
+COLOE_LINE_WORDS = 34        # + counter word + flag word (paper's 8B area)
+FLAG_ENCRYPTED = np.uint32(1)
+
+
+def pad_to_lines(words_u32):
+    """(m,) u32 -> ((L, 32) u32, original length)."""
+    m = words_u32.shape[0]
+    lines = -(-m // WORDS_PER_LINE)
+    pad = lines * WORDS_PER_LINE - m
+    if pad:
+        words_u32 = jnp.concatenate(
+            [words_u32, jnp.zeros((pad,), jnp.uint32)])
+    return words_u32.reshape(lines, WORDS_PER_LINE), m
+
+
+def unpad_lines(lines_u32, orig_len: int):
+    return lines_u32.reshape(-1)[:orig_len]
+
+
+def coloe_pack(data_lines, counters, flags):
+    """(L,32), (L,), (L,) -> (L, 34) colocated buffer."""
+    return jnp.concatenate(
+        [data_lines,
+         counters.astype(jnp.uint32)[:, None],
+         flags.astype(jnp.uint32)[:, None]], axis=1)
+
+
+def coloe_unpack(packed) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(L, 34) -> data (L,32), counters (L,), flags (L,)."""
+    return packed[:, :WORDS_PER_LINE], packed[:, WORDS_PER_LINE], packed[:, WORDS_PER_LINE + 1]
+
+
+def counter_mode_layout(data_lines, counters):
+    """Counter-mode storage: two independent buffers (paper Fig 6a)."""
+    return {"data": data_lines, "counters": counters.astype(jnp.uint32)}
+
+
+def coloe_bytes(n_lines: int) -> int:
+    return n_lines * COLOE_LINE_WORDS * 4
+
+
+def counter_mode_bytes(n_lines: int) -> Tuple[int, int]:
+    """(data bytes, counter-table bytes)."""
+    return n_lines * WORDS_PER_LINE * 4, n_lines * 8

@@ -1,0 +1,85 @@
+"""Criticality-aware Smart Encryption (SE) — paper §3.1.
+
+Rank the *input rows* of each weight tensor by ℓ1-norm; encrypt the top-r
+fraction (plus the matching input-feature channels). For conv kernels a
+"row" is an input channel of the (k, k, c_in, c_out) kernel; for matmul
+weights it is an input feature. Rows with the smallest |w| sums "tend to
+produce feature maps with weak activations" [paper §3.1.2 citing pruning
+literature] and may ship in plaintext with no measured security loss.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def row_importance(w, row_axes: Sequence[int], batch_axes: Sequence[int] = ()):
+    """ℓ1 importance per input row.
+
+    row_axes: axes that index the row (kept); batch_axes: independent
+    leading axes (kept, importance computed separately per slice, e.g. the
+    layer-stack axis or the MoE expert axis). All other axes are reduced.
+    Returns an array of shape batch_axes + row_axes (flattened in order).
+    """
+    keep = tuple(batch_axes) + tuple(row_axes)
+    reduce_axes = tuple(a for a in range(w.ndim) if a not in keep)
+    imp = jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=reduce_axes)
+    # move kept axes into canonical order batch..., rows...
+    order = sorted(range(len(keep)), key=lambda i: keep[i])
+    # after the sum, remaining dims are the kept axes in ascending axis order
+    asc = sorted(keep)
+    perm = [asc.index(a) for a in keep]
+    imp = jnp.transpose(imp, perm)
+    b = len(batch_axes)
+    return imp.reshape(imp.shape[:b] + (-1,))
+
+
+def encryption_mask(importance, ratio: float):
+    """Boolean mask (True = encrypt) over the last axis: top-⌈ratio·n⌉ rows
+    by ℓ1 importance (paper encrypts the *largest* sums)."""
+    n = importance.shape[-1]
+    k = int(np.ceil(ratio * n))
+    if k <= 0:
+        return jnp.zeros(importance.shape, bool)
+    if k >= n:
+        return jnp.ones(importance.shape, bool)
+    # threshold at the k-th largest value per slice; ties broken by rank so
+    # exactly k rows are selected.
+    order = jnp.argsort(-importance, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    return ranks < k
+
+
+def conv_row_importance(w):
+    """w: (k, k, c_in, c_out) -> (c_in,) ℓ1 per input channel."""
+    return row_importance(w, row_axes=(2,))
+
+
+def cnn_channel_masks(cfg, params, ratio: float, protect_boundary: bool = True):
+    """Per-conv-layer (weight row mask, encrypted-input-FM channel mask).
+
+    Paper §3.4.1: full encryption on the first two CONV layers, the last
+    CONV layer, and the FC layers; SE on the rest. The encrypted input-FM
+    channels of layer l are exactly the encrypted kernel rows of layer l
+    (each kernel row convolves only its own input channel).
+    """
+    conv_ids = [i for i, sp in enumerate(cfg.stages) if sp.kind == "conv"]
+    fc_ids = [i for i, sp in enumerate(cfg.stages) if sp.kind == "fc"]
+    always_full = set()
+    if protect_boundary:
+        always_full |= set(conv_ids[:2] + conv_ids[-1:] + fc_ids)
+    masks = {}
+    for i, sp in enumerate(cfg.stages):
+        if sp.kind == "pool":
+            continue
+        w = params[i]["w"]
+        r = 1.0 if i in always_full else ratio
+        if sp.kind == "conv":
+            imp = conv_row_importance(w)
+        else:
+            imp = row_importance(w, row_axes=(0,))
+        masks[i] = encryption_mask(imp, r)
+    return masks

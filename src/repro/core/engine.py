@@ -1,0 +1,235 @@
+"""Memory-encryption engines — paper §2.3 / §3.2.
+
+Three engines over flat uint32 word buffers (a tensor bitcast to words):
+
+* ``DirectEngine``   — AES-128-ECB on each 16 B block, one global key. The
+  paper's low-security baseline (dictionary/retry-attack prone: equal
+  plaintext -> equal ciphertext).
+* ``CounterEngine``  — counter-mode: OTP = ChaCha20(key, line_addr,
+  write_counter); XOR with data. Counters stored in a SEPARATE table
+  (extra memory stream -> the paper's +31-35% accesses).
+* ``ColoEEngine``    — identical OTP, counters colocated per line in a
+  packed 34-word record (single stream; paper's contribution #2).
+
+Security property shared by Counter/ColoE: the (line_addr, write_counter)
+pair is never reused for a given key, so OTPs are unique; counters are
+stored in plaintext (safe without the key, paper §2.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cipher as C
+from repro.core import coloe as CL
+
+
+def tensor_to_words(x) -> Tuple[jnp.ndarray, tuple, jnp.dtype]:
+    """Bitcast any float/int tensor to a flat u32 word buffer (pads to 4B)."""
+    flat = x.reshape(-1)
+    dt = flat.dtype
+    if dt.itemsize == 4:
+        words = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    elif dt.itemsize == 2:
+        if flat.shape[0] % 2:
+            flat = jnp.concatenate([flat, jnp.zeros((1,), dt)])
+        half = jax.lax.bitcast_convert_type(flat, jnp.uint16).reshape(-1, 2)
+        words = jax.lax.bitcast_convert_type(half, jnp.uint32).reshape(-1)
+    else:
+        raise TypeError(f"unsupported dtype {dt}")
+    return words.reshape(-1), x.shape, dt
+
+
+def words_to_tensor(words, shape, dtype):
+    dtype = jnp.dtype(dtype)
+    n = int(np.prod(shape)) if shape else 1
+    if dtype.itemsize == 4:
+        flat = jax.lax.bitcast_convert_type(words, dtype)
+    elif dtype.itemsize == 2:
+        flat = jax.lax.bitcast_convert_type(
+            words, jnp.uint16).reshape(-1)
+        flat = jax.lax.bitcast_convert_type(flat, dtype)
+    else:
+        raise TypeError(dtype)
+    return flat[:n].reshape(shape)
+
+
+def _line_otp(key_words, line_addrs, write_counters, nonce2):
+    """128 B OTP per line: two ChaCha blocks with
+    nonce = (line_addr, nonce2[0], nonce2[1]), counter = wc*2 + subblock."""
+    L = line_addrs.shape[0]
+    addrs = jnp.repeat(line_addrs.astype(jnp.uint32), 2)
+    wc = jnp.repeat(write_counters.astype(jnp.uint32), 2)
+    sub = jnp.tile(jnp.arange(2, dtype=jnp.uint32), L)
+    counters = wc * jnp.uint32(2) + sub
+    nonces = jnp.stack([
+        addrs,
+        jnp.broadcast_to(jnp.uint32(nonce2[0]), addrs.shape),
+        jnp.broadcast_to(jnp.uint32(nonce2[1]), addrs.shape)], axis=1)
+    ks = C.chacha20_block(key_words, counters, nonces)       # (2L, 16)
+    return ks.reshape(L, CL.WORDS_PER_LINE)
+
+
+@dataclasses.dataclass
+class SealedBuffer:
+    """Ciphertext + metadata for one tensor (or tensor row-group)."""
+    scheme: str                      # direct | counter | coloe
+    payload: jnp.ndarray             # direct/counter: (L,32); coloe: (L,34)
+    counters: Optional[jnp.ndarray]  # counter scheme: separate (L,) table
+    orig_len: int                    # valid words
+    shape: tuple
+    dtype: object
+    nonce2: tuple                    # per-tensor nonce words (static)
+
+    @property
+    def n_lines(self) -> int:
+        if self.payload is not None:
+            return self.payload.shape[0]
+        return -(-self.orig_len // CL.WORDS_PER_LINE)
+
+    def data_bytes(self) -> int:
+        return self.n_lines * CL.WORDS_PER_LINE * 4
+
+    def stored_bytes(self) -> int:
+        if self.scheme == "coloe":
+            return self.n_lines * CL.COLOE_LINE_WORDS * 4
+        extra = self.n_lines * 8 if self.scheme == "counter" else 0
+        return self.data_bytes() + extra
+
+    def extra_streams(self) -> int:
+        """Independent memory streams a reader must fetch (1 = colocated)."""
+        return 2 if self.scheme == "counter" else 1
+
+
+class DirectEngine:
+    """AES-128-ECB — paper's 'Direct' baseline."""
+    name = "direct"
+
+    def __init__(self, key_bytes: bytes):
+        self.round_keys = C.aes128_key_schedule(
+            np.frombuffer(key_bytes[:16], np.uint8))
+
+    def encrypt(self, x, nonce2=(0, 0), enc_flags=None) -> SealedBuffer:
+        words, shape, dt = tensor_to_words(x)
+        lines, orig = CL.pad_to_lines(words)
+        by = jax.lax.bitcast_convert_type(lines.reshape(-1), jnp.uint8)
+        ct = C.aes128_encrypt_blocks(by.reshape(-1, 16), self.round_keys)
+        ctw = jax.lax.bitcast_convert_type(
+            ct.reshape(-1, 4), jnp.uint32).reshape(lines.shape)
+        if enc_flags is not None:
+            enc = (enc_flags & 1).astype(bool)[:, None]
+            ctw = jnp.where(enc, ctw, lines)
+        flags = (jnp.ones((lines.shape[0],), jnp.uint32) if enc_flags is None
+                 else enc_flags.astype(jnp.uint32))
+        return SealedBuffer("direct", ctw, flags, orig, shape, dt, (0, 0))
+
+    def decrypt(self, s: SealedBuffer):
+        by = jax.lax.bitcast_convert_type(s.payload.reshape(-1), jnp.uint8)
+        pt = C.aes128_decrypt_blocks(by.reshape(-1, 16), self.round_keys)
+        words = jax.lax.bitcast_convert_type(
+            pt.reshape(-1, 4), jnp.uint32).reshape(s.payload.shape)
+        if s.counters is not None:     # flags ride in the counters slot
+            enc = (s.counters & 1).astype(bool)[:, None]
+            words = jnp.where(enc, words, s.payload)
+        return words_to_tensor(words.reshape(-1)[:s.orig_len], s.shape, s.dtype)
+
+
+class _CtrBase:
+    def __init__(self, key_bytes: bytes):
+        self.key_words = jnp.asarray(C.key_to_words(key_bytes[:32]))
+
+    def _otp(self, n_lines, write_counters, nonce2):
+        addrs = jnp.arange(n_lines, dtype=jnp.uint32)
+        return _line_otp(self.key_words, addrs, write_counters, nonce2)
+
+
+class CounterEngine(_CtrBase):
+    """Counter-mode with a separate counter table — paper's 'Counter'."""
+    name = "counter"
+
+    def encrypt(self, x, nonce2=(1, 2), write_counters=None,
+                enc_flags=None) -> SealedBuffer:
+        words, shape, dt = tensor_to_words(x)
+        lines, orig = CL.pad_to_lines(words)
+        L = lines.shape[0]
+        wc = (jnp.zeros((L,), jnp.uint32) if write_counters is None
+              else write_counters.astype(jnp.uint32))
+        if enc_flags is not None:
+            # paper §3.3: the spare counter bits carry the emalloc flag; we
+            # fold it into bit 31 of the stored counter word.
+            wc = wc | ((enc_flags.astype(jnp.uint32) & 1) << 31)
+        else:
+            wc = wc | jnp.uint32(1 << 31)
+        ct_full = lines ^ self._otp(L, wc & jnp.uint32(0x7FFFFFFF), nonce2)
+        enc = (wc >> 31).astype(bool)[:, None]
+        ct = jnp.where(enc, ct_full, lines)
+        return SealedBuffer("counter", ct, wc, orig, shape, dt, tuple(nonce2))
+
+    def decrypt(self, s: SealedBuffer):
+        wc = s.counters
+        pt_full = s.payload ^ self._otp(
+            s.payload.shape[0], wc & jnp.uint32(0x7FFFFFFF), s.nonce2)
+        enc = (wc >> 31).astype(bool)[:, None]
+        pt = jnp.where(enc, pt_full, s.payload)
+        return words_to_tensor(pt.reshape(-1)[:s.orig_len], s.shape, s.dtype)
+
+    def rewrite(self, s: SealedBuffer, x) -> SealedBuffer:
+        """Write-back: bump per-line counters so OTPs are never reused."""
+        words, shape, dt = tensor_to_words(x)
+        lines, orig = CL.pad_to_lines(words)
+        flag = s.counters & jnp.uint32(0x80000000)
+        wc = ((s.counters & jnp.uint32(0x7FFFFFFF)) + 1) | flag
+        ct_full = lines ^ self._otp(lines.shape[0], wc & jnp.uint32(0x7FFFFFFF),
+                                    s.nonce2)
+        enc = (wc >> 31).astype(bool)[:, None]
+        ct = jnp.where(enc, ct_full, lines)
+        return SealedBuffer("counter", ct, wc, orig, shape, dt, s.nonce2)
+
+
+class ColoEEngine(_CtrBase):
+    """Colocation-mode — paper's contribution: counters packed in-line."""
+    name = "coloe"
+
+    def encrypt(self, x, nonce2=(1, 2), write_counters=None,
+                enc_flags=None) -> SealedBuffer:
+        words, shape, dt = tensor_to_words(x)
+        lines, orig = CL.pad_to_lines(words)
+        L = lines.shape[0]
+        wc = (jnp.zeros((L,), jnp.uint32) if write_counters is None
+              else write_counters.astype(jnp.uint32))
+        flags = (jnp.full((L,), CL.FLAG_ENCRYPTED, jnp.uint32)
+                 if enc_flags is None else enc_flags.astype(jnp.uint32))
+        otp = self._otp(L, wc, nonce2)
+        # lines with flag bit 0 cleared (malloc'd, not emalloc'd) bypass the
+        # engine — paper §3.3
+        enc = (flags & 1).astype(bool)[:, None]
+        ct = jnp.where(enc, lines ^ otp, lines)
+        packed = CL.coloe_pack(ct, wc, flags)
+        return SealedBuffer("coloe", packed, None, orig, shape, dt, tuple(nonce2))
+
+    def decrypt(self, s: SealedBuffer):
+        ct, wc, flags = CL.coloe_unpack(s.payload)
+        otp = self._otp(ct.shape[0], wc, s.nonce2)
+        enc = (flags & 1).astype(bool)[:, None]
+        pt = jnp.where(enc, ct ^ otp, ct)
+        return words_to_tensor(pt.reshape(-1)[:s.orig_len], s.shape, s.dtype)
+
+    def rewrite(self, s: SealedBuffer, x) -> SealedBuffer:
+        _, wc, flags = CL.coloe_unpack(s.payload)
+        words, shape, dt = tensor_to_words(x)
+        lines, orig = CL.pad_to_lines(words)
+        wc = wc + 1
+        otp = self._otp(lines.shape[0], wc, s.nonce2)
+        enc = (flags & 1).astype(bool)[:, None]
+        ct = jnp.where(enc, lines ^ otp, lines)
+        return SealedBuffer("coloe", CL.coloe_pack(ct, wc, flags), None,
+                            orig, shape, dt, s.nonce2)
+
+
+def make_engine(mode: str, key_bytes: bytes):
+    return {"direct": DirectEngine, "counter": CounterEngine,
+            "coloe": ColoEEngine}[mode](key_bytes)

@@ -1,0 +1,103 @@
+"""Sealed parameter store: keep model weights as ciphertext (the HBM/at-rest
+image an adversary could probe — DESIGN.md §2) and decrypt on use.
+
+``seal_params`` applies the SE plan (which rows are ciphertext) + the chosen
+engine (direct / counter / coloe) per leaf. ``unseal_params`` is jittable so
+serving graphs can decrypt in-graph; the perf-critical fused path lives in
+``repro.kernels`` (decrypt inside the matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SealConfig
+from repro.core import coloe as CL
+from repro.core import engine as E
+from repro.core import plan as P
+
+
+@dataclasses.dataclass
+class SealedParams:
+    """buffers: jit-traversable pytree; metas/plans: static host metadata."""
+    buffers: Dict[str, dict]
+    metas: Dict[str, E.SealedBuffer]     # payload/counters fields unused here
+    plans: Dict[str, P.LeafPlan]
+    treedef: object
+    seal: SealConfig
+
+    def stored_bytes(self) -> int:
+        return sum(m.stored_bytes() for m in self.metas.values())
+
+    def enc_fraction(self) -> float:
+        t = P.plan_totals(self.plans)
+        return t["enc_fraction"]
+
+
+def _nonce2(path: str) -> Tuple[int, int]:
+    h = hashlib.sha256(path.encode()).digest()
+    return (int.from_bytes(h[:4], "little"), int.from_bytes(h[4:8], "little"))
+
+
+def line_flags_from_mask(mask_elems, dtype, n_lines: int) -> jnp.ndarray:
+    """Element-level encrypt mask -> per-128B-line flag (any elem encrypted)."""
+    epw = 4 // jnp.dtype(dtype).itemsize if jnp.dtype(dtype).itemsize < 4 else 1
+    flat = mask_elems.reshape(-1)
+    elems_per_line = CL.WORDS_PER_LINE * max(epw, 1)
+    pad = n_lines * elems_per_line - flat.shape[0]
+    if pad > 0:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), bool)])
+    per_line = flat.reshape(n_lines, elems_per_line)
+    return jnp.any(per_line, axis=1).astype(jnp.uint32)
+
+
+def seal_params(params, seal: SealConfig, key_bytes: bytes) -> SealedParams:
+    plans = P.make_plan(params, seal)
+    eng = E.make_engine(seal.mode, key_bytes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    buffers, metas = {}, {}
+    for keypath, leaf in flat:
+        path = "/".join(P._path_tuple(keypath))
+        plan = plans[path]
+        n_words = -(-leaf.size * leaf.dtype.itemsize // 4)
+        n_lines = -(-n_words // CL.WORDS_PER_LINE)
+        if plan.mode == "rows":
+            mask = P.expand_mask(plan, leaf.shape)
+            flags = line_flags_from_mask(mask, leaf.dtype, n_lines)
+        else:
+            flags = jnp.ones((n_lines,), jnp.uint32)
+        sealed = eng.encrypt(leaf, nonce2=_nonce2(path), enc_flags=flags) \
+            if seal.mode != "direct" else eng.encrypt(leaf, enc_flags=flags)
+        buffers[path] = {"payload": sealed.payload}
+        if sealed.counters is not None:
+            buffers[path]["counters"] = sealed.counters
+        metas[path] = dataclasses.replace(sealed, payload=None, counters=None)
+    return SealedParams(buffers, metas, plans, treedef, seal)
+
+
+def unseal_params(sp: SealedParams, key_bytes: bytes):
+    """Decrypt every leaf; jittable (buffers are traced, metadata static)."""
+    eng = E.make_engine(sp.seal.mode, key_bytes)
+    flat = []
+    for path in sp.metas:
+        m = sp.metas[path]
+        buf = sp.buffers[path]
+        s = dataclasses.replace(m, payload=buf["payload"],
+                                counters=buf.get("counters"))
+        flat.append(eng.decrypt(s))
+    return jax.tree_util.tree_unflatten(sp.treedef, flat)
+
+
+def sealed_byte_report(sp: SealedParams) -> Dict[str, float]:
+    tot = P.plan_totals(sp.plans)
+    return {
+        "plaintext_bytes": tot["total_bytes"],
+        "enc_fraction": tot["enc_fraction"],
+        "stored_bytes": sp.stored_bytes(),
+        "overhead": sp.stored_bytes() / max(tot["total_bytes"], 1) - 1.0,
+    }

@@ -1,0 +1,180 @@
+"""Adversarial attacks + substitute-model construction (paper §3.4).
+
+Substitute models the adversary can build from bus-snooped data:
+  * white-box — no encryption: the victim model verbatim;
+  * black-box — full encryption: only the architecture is known; retrain
+    from scratch on query data (Jacobian-augmented, paper cites [56]);
+  * SE(r)     — smart encryption at ratio r: the (1-r) lowest-|w| rows of
+    every SE layer are plaintext; the adversary fills the encrypted rows
+    with He-normal noise and fine-tunes ONLY those rows on query data.
+
+Attack: I-FGSM [37] targeted at the substitute, transferred to the victim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CNNConfig
+from repro.core.criticality import cnn_channel_masks
+from repro.models import cnn as CNN
+from repro.optim import adamw
+from repro.config import TrainConfig
+
+
+# --------------------------------------------------------------------------
+# training helper (plain SGD-momentum over CNN params, small scale)
+# --------------------------------------------------------------------------
+
+def train_cnn(cfg: CNNConfig, params, x, y, *, epochs: int = 12,
+              batch: int = 128, lr: float = 2e-2, seed: int = 0,
+              freeze_masks: Optional[Dict[int, jnp.ndarray]] = None,
+              param_mask_value: float = 1.0):
+    """SGD-momentum training. ``freeze_masks``: per-layer input-row masks
+    (True = trainable/encrypted rows; False rows keep their values —
+    SE fine-tuning keeps the *known* plaintext rows fixed, paper §3.4.1)."""
+    n = x.shape[0]
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, bx, by: CNN.cnn_loss(cfg, p, {"x": bx, "y": by})[0]))
+
+    mom = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.RandomState(seed)
+
+    def masked(grads):
+        if freeze_masks is None:
+            return grads
+        out = []
+        for i, (g, p0) in enumerate(zip(grads, params)):
+            if i in freeze_masks and "w" in g:
+                m = freeze_masks[i]
+                w = g["w"]
+                if w.ndim == 4:      # conv (k,k,cin,cout): rows = cin
+                    mm = m[None, None, :, None]
+                else:                # fc (in,out)
+                    mm = m[:, None]
+                g = dict(g, w=jnp.where(mm, w, 0.0))
+            out.append(g)
+        return out
+
+    mu = 0.9
+    steps_per = max(1, n // batch)
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        cur_lr = lr * (0.5 ** (ep // 5))
+        for s in range(steps_per):
+            idx = perm[s * batch:(s + 1) * batch]
+            loss, grads = loss_grad(params, x[idx], y[idx])
+            grads = masked(grads)
+            mom = jax.tree.map(lambda m, g: mu * m + g, mom, grads)
+            params = jax.tree.map(lambda p, m: p - cur_lr * m, params, mom)
+    return params
+
+
+def accuracy(cfg: CNNConfig, params, x, y, batch: int = 256) -> float:
+    correct = 0
+    fwd = jax.jit(lambda bx: CNN.cnn_forward(cfg, params, bx))
+    for i in range(0, x.shape[0], batch):
+        logits = fwd(x[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return correct / x.shape[0]
+
+
+# --------------------------------------------------------------------------
+# substitute construction
+# --------------------------------------------------------------------------
+
+def jacobian_augment(cfg, victim_params, x, y, rounds: int = 2,
+                     lam: float = 0.08, seed: int = 0):
+    """Papernot-style Jacobian-based dataset augmentation: gradient-sign
+    perturbations (decision-boundary probing) + Gaussian jitter (on-manifold
+    coverage), all labeled by querying the victim."""
+    grad_fn = jax.jit(jax.grad(
+        lambda bx, by: CNN.cnn_loss(cfg, victim_params, {"x": bx, "y": by})[0]))
+    fwd = jax.jit(lambda bx: jnp.argmax(CNN.cnn_forward(cfg, victim_params, bx), -1))
+    rng = np.random.RandomState(seed)
+    xs, ys = [x], [np.asarray(fwd(x))]
+    cur = x
+    for r in range(rounds):
+        g = grad_fn(cur, jnp.asarray(ys[-1]))
+        cur = np.clip(cur + lam * np.sign(np.asarray(g)), -3, 3).astype(np.float32)
+        xs.append(cur)
+        ys.append(np.asarray(fwd(cur)))
+        jit = (x + rng.standard_normal(x.shape).astype(np.float32) *
+               0.15 * (r + 1)).astype(np.float32)
+        xs.append(jit)
+        ys.append(np.asarray(fwd(jit)))
+    return np.concatenate(xs), np.concatenate(ys).astype(np.int32)
+
+
+def se_substitute_init(cfg: CNNConfig, victim_params, ratio: float,
+                       seed: int = 0):
+    """Adversary's view under SE(ratio): plaintext (low-|w|) rows copied
+    from the victim, encrypted rows re-initialized (He normal). Biases and
+    norm parameters are always encrypted (tiny but statistics-revealing),
+    so they reset to their defaults. Returns (init_params, freeze_masks:
+    rows the adversary must LEARN — everything except plaintext rows)."""
+    masks = cnn_channel_masks(cfg, victim_params, ratio)
+    key = jax.random.key(seed)
+    out = []
+    for i, p in enumerate(victim_params):
+        if i not in masks or "w" not in p:
+            out.append(jax.tree.map(jnp.array, p))
+            continue
+        m = masks[i]
+        w = p["w"]
+        rnd = jax.random.normal(jax.random.fold_in(key, i), w.shape) * \
+            jnp.sqrt(2.0 / max(1, int(np.prod(w.shape[:-1]))))
+        if w.ndim == 4:
+            mm = m[None, None, :, None]
+        else:
+            mm = m[:, None]
+        q = dict(p, w=jnp.where(mm, rnd, w))
+        # side params are ciphertext: reset to init defaults
+        if "b" in q:
+            q["b"] = jnp.zeros_like(q["b"])
+        if "ln_s" in q:
+            q["ln_s"] = jnp.ones_like(q["ln_s"])
+            q["ln_b"] = jnp.zeros_like(q["ln_b"])
+        if "proj" in q:
+            q["proj"] = jax.random.normal(
+                jax.random.fold_in(key, 1000 + i), q["proj"].shape) * \
+                jnp.sqrt(2.0 / max(1, int(np.prod(q["proj"].shape[:-1]))))
+        out.append(q)
+    return out, masks
+
+
+# --------------------------------------------------------------------------
+# I-FGSM adversarial examples + transferability
+# --------------------------------------------------------------------------
+
+def ifgsm(cfg: CNNConfig, params, x, y_true, *, eps: float = 0.12,
+          alpha: float = 0.02, iters: int = 10):
+    """Untargeted I-FGSM against ``params``; returns adversarial x."""
+    grad_fn = jax.jit(jax.grad(
+        lambda bx: CNN.cnn_loss(cfg, params, {"x": bx, "y": y_true})[0]))
+    x0 = jnp.asarray(x)
+    adv = x0
+    for _ in range(iters):
+        g = grad_fn(adv)
+        adv = adv + alpha * jnp.sign(g)
+        adv = jnp.clip(adv, x0 - eps, x0 + eps)
+    return np.asarray(adv)
+
+
+def attack_success(cfg: CNNConfig, params, adv_x, y_true) -> float:
+    logits = jax.jit(lambda bx: CNN.cnn_forward(cfg, params, bx))(adv_x)
+    return float(jnp.mean(jnp.argmax(logits, -1) != y_true))
+
+
+def transferability(cfg: CNNConfig, sub_params, victim_params, x, y,
+                    **ifgsm_kw) -> float:
+    """Fraction of substitute-crafted adversarial examples (that fool the
+    substitute) which also fool the victim — paper Fig 9's metric."""
+    adv = ifgsm(cfg, sub_params, x, y, **ifgsm_kw)
+    fool_sub = attack_success(cfg, sub_params, adv, y)
+    fool_victim = attack_success(cfg, victim_params, adv, y)
+    return fool_victim, fool_sub

@@ -1,0 +1,81 @@
+"""End-to-end security evaluation (paper Figs 8 & 9, scaled to CPU).
+
+Protocol mirrors §3.4.1: the victim trains on 90% of the data; the
+adversary holds the other 10%, Jacobian-augments it, labels it by querying
+the victim, and builds white-box / black-box / SE(r) substitutes. Fig 8:
+substitute accuracy on held-out test data. Fig 9: I-FGSM transferability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+import jax
+
+from repro.configs import get_reduced
+from repro.data.synthetic import image_dataset
+from repro.models import cnn as CNN
+from repro.core.security import attacks as A
+
+
+@dataclasses.dataclass
+class SecurityReport:
+    model: str
+    victim_acc: float
+    white_acc: float
+    black_acc: float
+    se_acc: Dict[float, float]
+    white_transfer: float
+    black_transfer: float
+    se_transfer: Dict[float, float]
+
+
+def evaluate(model_id: str = "vgg16", *, n_train: int = 2500,
+             n_test: int = 400, ratios=(0.2, 0.4, 0.5, 0.8),
+             epochs: int = 15, sub_epochs: int = 12, seed: int = 0,
+             quick: bool = False) -> SecurityReport:
+    if quick:
+        n_train, n_test, epochs, sub_epochs = 1600, 200, 12, 8
+        ratios = (0.2, 0.5)
+    cfg = get_reduced(model_id)
+    x, y = image_dataset(n_train + n_test, img=cfg.img_size, seed=seed,
+                         noise=0.45)
+    xte, yte = x[n_train:], y[n_train:]
+    x, y = x[:n_train], y[:n_train]
+    # victim: 90% / adversary: 10% (paper's split)
+    n_vic = int(0.9 * n_train)
+    xv, yv = x[:n_vic], y[:n_vic]
+    xa = x[n_vic:]
+
+    key = jax.random.key(seed)
+    victim = A.train_cnn(cfg, CNN.init_cnn(cfg, key), xv, yv, epochs=epochs)
+    victim_acc = A.accuracy(cfg, victim, xte, yte)
+
+    # adversary's query set (paper: 5k images -> 45k augmented; scaled)
+    xq, yq = A.jacobian_augment(cfg, victim, xa, None, rounds=3, seed=seed)
+
+    # white-box: the victim itself
+    white_acc = victim_acc
+    # black-box: blank model trained on query data
+    black = A.train_cnn(cfg, CNN.init_cnn(cfg, jax.random.key(seed + 1)),
+                        xq, yq, epochs=sub_epochs)
+    black_acc = A.accuracy(cfg, black, xte, yte)
+
+    se_acc, se_sub = {}, {}
+    for r in ratios:
+        init, masks = A.se_substitute_init(cfg, victim, r, seed=seed)
+        sub = A.train_cnn(cfg, init, xq, yq, epochs=sub_epochs,
+                          freeze_masks=masks)
+        se_acc[r] = A.accuracy(cfg, sub, xte, yte)
+        se_sub[r] = sub
+
+    # Fig 9: transferability of substitute-crafted adversarial examples
+    n_adv = min(256, n_test)
+    wt, _ = A.transferability(cfg, victim, victim, xte[:n_adv], yte[:n_adv])
+    bt, _ = A.transferability(cfg, black, victim, xte[:n_adv], yte[:n_adv])
+    se_tr = {r: A.transferability(cfg, se_sub[r], victim,
+                                  xte[:n_adv], yte[:n_adv])[0]
+             for r in ratios}
+    return SecurityReport(model_id, victim_acc, white_acc, black_acc, se_acc,
+                          wt, bt, se_tr)

@@ -1,0 +1,55 @@
+"""Sharded host loader with background prefetch.
+
+Each host generates only its shard (data-parallel slice) and the arrays are
+device_put with the batch sharding; a one-deep prefetch thread overlaps
+host-side generation with device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class PrefetchLoader:
+    def __init__(self, batch_fn: Callable[[int], dict], start_step: int = 0,
+                 sharding=None, depth: int = 2):
+        self.batch_fn = batch_fn
+        self.step = start_step
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        s = self.step
+        while not self._stop.is_set():
+            batch = self.batch_fn(s)
+            if self.sharding is not None:
+                batch = jax.tree.map(
+                    lambda x, sh: jax.device_put(x, sh), batch, self.sharding)
+            try:
+                self._q.put((s, batch), timeout=0.5)
+                s += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        while True:
+            try:
+                s, batch = self._q.get(timeout=1.0)
+                return s, batch
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

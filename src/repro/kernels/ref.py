@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cipher as C
+
+
+def chacha20_keystream_ref(key_words, nonce_words, counters):
+    """(16, N) u32 keystream — word-major, same layout as the kernel."""
+    ks = C.chacha20_block(jnp.asarray(key_words, jnp.uint32),
+                          jnp.asarray(counters, jnp.uint32),
+                          jnp.asarray(nonce_words, jnp.uint32))  # (N, 16)
+    return ks.T
+
+
+# --------------------------------------------------------------------------
+# tile-sealed weight format + fused sealed matmul
+# --------------------------------------------------------------------------
+
+def tile_counters(k: int, n: int, bk: int, bn: int, write_counter: int = 0):
+    """Counter id for every weight word, derived from its tile address.
+
+    word (i, j) lives in tile t = (i//bk)*(n//bn) + (j//bn); within the tile
+    words are numbered row-major; each ChaCha block covers 16 words. The
+    write_counter is folded in by offsetting the counter space (the sealing
+    side bumps it on every rewrite, mirroring ColoE write-backs).
+    """
+    nk, nn = k // bk, n // bn
+    ii, jj = np.meshgrid(np.arange(k), np.arange(n), indexing="ij")
+    tile_id = (ii // bk) * nn + (jj // bn)
+    within = (ii % bk) * bn + (jj % bn)
+    word_id = tile_id.astype(np.int64) * (bk * bn) + within
+    blocks_total = k * n // 16
+    ctr = word_id // 16 + np.int64(write_counter) * blocks_total
+    lane = word_id % 16
+    return ctr.astype(np.uint32), lane.astype(np.uint32)
+
+
+def seal_weights_ref(w, key_words, nonce_words, bk: int, bn: int,
+                     row_mask=None, write_counter: int = 0):
+    """Encrypt a (K, N) f32 weight for the fused kernel.
+
+    Returns u32 ciphertext with the same (K, N) shape. Rows where
+    ``row_mask`` is False stay plaintext (SE bypass).
+    """
+    k, n = w.shape
+    assert k % bk == 0 and n % bn == 0, (w.shape, bk, bn)
+    wu = jax.lax.bitcast_convert_type(w.astype(jnp.float32), jnp.uint32)
+    ctr, lane = tile_counters(k, n, bk, bn, write_counter)
+    uniq = (k * n) // 16
+    ks_blocks = C.chacha20_block(
+        jnp.asarray(key_words, jnp.uint32),
+        jnp.arange(np.uint32(write_counter) * uniq,
+                   np.uint32(write_counter) * uniq + uniq, dtype=jnp.uint32),
+        jnp.asarray(nonce_words, jnp.uint32))          # (uniq, 16)
+    pad = ks_blocks[ctr % uniq, lane]
+    ct = wu ^ pad
+    if row_mask is not None:
+        ct = jnp.where(jnp.asarray(row_mask)[:, None], ct, wu)
+    return ct
+
+
+def unseal_weights_ref(wct, key_words, nonce_words, bk: int, bn: int,
+                       row_mask=None, write_counter: int = 0):
+    ct = jnp.asarray(wct, jnp.uint32)
+    pt = seal_weights_ref(
+        jax.lax.bitcast_convert_type(ct, jnp.float32), key_words, nonce_words,
+        bk, bn, row_mask, write_counter)
+    return jax.lax.bitcast_convert_type(pt, jnp.float32)
+
+
+def sealed_matmul_ref(x, wct, key_words, nonce_words, bk: int, bn: int,
+                      row_mask=None, write_counter: int = 0):
+    """Oracle: decrypt the whole weight, then plain matmul."""
+    w = unseal_weights_ref(wct, key_words, nonce_words, bk, bn, row_mask,
+                           write_counter)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)

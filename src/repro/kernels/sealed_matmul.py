@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused decrypt + matmul over sealed (ciphertext) weights.
+
+The paper hides decryption latency inside the memory read (counter-mode OTP
+generated in parallel with the DRAM fetch, §2.3). The TPU-native analogue
+goes one step further: the ChaCha20 keystream for a weight tile is generated
+on the VPU *while that ciphertext tile streams HBM->VMEM for the matmul*,
+and the XOR happens in-register immediately before the MXU contraction —
+
+    y[i,j] = sum_k x[i,k] * f32( w_ct[k,j] XOR pad(k,j) )
+
+so sealed weights cost ZERO extra HBM traffic vs. a plain matmul (the
+unfused baseline reads ct, writes pt, re-reads pt: 3x weight bytes).
+
+SE integration: ``row_mask[k]`` marks encrypted input rows; plaintext rows
+skip the XOR (the paper's emalloc/malloc bypass, §3.3).
+
+Tiling: grid (M/bm, N/bn, K/bk), k-innermost accumulation in the out tile.
+BlockSpec tiles live in VMEM; bm/bn/bk default to 128/128/128 (MXU-aligned).
+Each (bk, bn) tile consumes bk*bn/16 ChaCha blocks whose counters derive
+from the tile address (same derivation as ``ref.tile_counters``), so any
+tile can be decrypted independently — this is what makes the layout
+DMA-friendly and the kernel grid-parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+from repro.kernels.chacha20 import _chacha_rounds, _CONST
+
+
+def _make_kernel(bm, bk, bn, nn_tiles, uniq):
+    nblk = (bk * bn) // 16
+
+    def kernel(key_ref, nonce_ref, wc_ref, x_ref, w_ref, mask_ref, out_ref):
+        j_idx = pl.program_id(1)
+        k_idx = pl.program_id(2)
+        tile_id = k_idx * nn_tiles + j_idx
+        base = wc_ref[0] * jnp.uint32(uniq) + jnp.uint32(tile_id * nblk)
+        ctr = base + jnp.arange(nblk, dtype=jnp.uint32)
+
+        init = [jnp.full((nblk,), _CONST[i], jnp.uint32) for i in range(4)]
+        init += [jnp.full((nblk,), key_ref[i], jnp.uint32) for i in range(8)]
+        init.append(ctr)
+        init += [jnp.full((nblk,), nonce_ref[i], jnp.uint32) for i in range(3)]
+        x16 = _chacha_rounds(list(init))
+        ks = jnp.stack([x16[i] + init[i] for i in range(16)], axis=0)  # (16, nblk)
+        pad = ks.T.reshape(bk, bn)
+
+        wu = w_ref[...]
+        mask = mask_ref[...].astype(bool)
+        wpt = jnp.where(mask[:, None], wu ^ pad, wu)
+        wf = jax.lax.bitcast_convert_type(wpt, jnp.float32)
+        acc = jnp.dot(x_ref[...], wf, preferred_element_type=jnp.float32)
+
+        @pl.when(k_idx == 0)
+        def _init():
+            out_ref[...] = acc
+
+        @pl.when(k_idx != 0)
+        def _acc():
+            out_ref[...] += acc
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def sealed_matmul(x, w_ct, row_mask, key_words, nonce_words, write_counter,
+                  *, bm: int = 128, bk: int = 128, bn: int = 128,
+                  interpret: bool = True):
+    """x: (M, K) f32; w_ct: (K, N) u32 (tile-sealed, see kernels.ref);
+    row_mask: (K,) bool/u8 (True = row is ciphertext);
+    write_counter: (1,) u32. Returns (M, N) f32."""
+    m, k = x.shape
+    k2, n = w_ct.shape
+    assert k == k2 and m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        (x.shape, w_ct.shape, bm, bk, bn)
+    nn_tiles = n // bn
+    uniq = (k * n) // 16
+    kernel = _make_kernel(bm, bk, bn, nn_tiles, uniq)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((8,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((3,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk,), lambda i, j, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(key_words, jnp.uint32), jnp.asarray(nonce_words, jnp.uint32),
+      jnp.asarray(write_counter, jnp.uint32).reshape(1),
+      x.astype(jnp.float32), w_ct.astype(jnp.uint32),
+      jnp.asarray(row_mask).astype(jnp.uint8))

@@ -1,0 +1,265 @@
+"""HLO artifact analyzer for the roofline terms.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — our layer scans
+would be undercounted by ~num_layers x. This module parses the
+post-optimization HLO text instead:
+
+  * builds the computation graph (computations, while bodies, fusions),
+  * reads each while's ``known_trip_count`` backend config,
+  * recursively totals dot/convolution FLOPs and collective bytes with
+    loop-trip scaling (dynamic-trip loops, e.g. the causal kv loop in
+    blockwise attention, take a caller-provided hint).
+
+Validated against analytic MODEL_FLOPS in tests/test_hlo_stats.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_NAME_SHAPE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+\[[\d,]*\])")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TOAPPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMLBL = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+_DOT = re.compile(r"=\s*([a-z0-9]+\[[\d,]*\])\S*\s+dot\(([^)]*)\)")
+_CONV = re.compile(r"=\s*([a-z0-9]+\[[\d,]*\])\S*\s+convolution\(([^)]*)\)")
+_COLL = re.compile(
+    r"=\s*(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_WHILE = re.compile(r"=\s*.*?\s+while\(")
+
+
+def _parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE.search(s)
+    if not m:
+        return "opaque", ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # (callee, trips): while bodies, fusions (trips=1), conditionals (1)
+    # (callee, trips, kind): kind "loop" descends for bytes; "fusion"
+    # sub-computations are in-register (flops only)
+    calls: List[Tuple[str, Optional[int], str]] = dataclasses.field(
+        default_factory=list)
+
+
+# ops whose operands/results do NOT move HBM bytes (views, plumbing) or are
+# counted elsewhere (collectives)
+_NO_BYTES_OPS = {
+    "parameter", "get-tuple-element", "tuple", "constant", "iota",
+    "bitcast", "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "rng-get-and-update-state", "custom-call",
+    # loop-carry copies are elided by buffer assignment on real backends
+    "copy", "copy-start", "copy-done",
+}
+_OPC_RE = re.compile(r"=\s*(?:\([^=]*?\)|\S+)\s+([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, CompStats], Optional[str]]:
+    comps: Dict[str, CompStats] = {}
+    shapes: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        if raw.startswith("ENTRY") or (raw and raw[0] == "%"):
+            m = _COMP_HDR.match(raw)
+            if m:
+                cur = m.group(1)
+                comps[cur] = CompStats()
+                if raw.startswith("ENTRY"):
+                    entry = cur
+                shapes = {}
+                # header params carry shapes: %p: f32[...]
+                for pm in re.finditer(r"([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])", raw):
+                    shapes[pm.group(1)] = _parse_shape(pm.group(2))
+                continue
+        if cur is None:
+            continue
+        ns = _NAME_SHAPE.match(raw)
+        if ns:
+            shapes[ns.group(1)] = _parse_shape(ns.group(2))
+        st = comps[cur]
+        # ---- byte accounting (HBM traffic estimate) ----
+        eq = raw.find(" = ")
+        if eq > 0:
+            opm = re.search(r"(?<!%)\b([a-z][a-z0-9\-_]*)\(", raw[eq:])
+            if opm and opm.group(1) not in _NO_BYTES_OPS and \
+                    not opm.group(1).startswith(COLLECTIVE_KINDS):
+                opcode = opm.group(1)
+                type_seg = raw[eq + 3:eq + opm.start()]
+                res_b = _shape_bytes(type_seg)
+                args_end = raw.find(")", eq + opm.end())
+                args = raw[eq + opm.end():args_end if args_end > 0 else None]
+                ops_b = []
+                for name in _OPERAND_RE.findall(args):
+                    dtshape = shapes.get(name)
+                    if dtshape is None:
+                        ops_b.append(0)
+                    else:
+                        dt_, dims_ = dtshape
+                        ops_b.append(_prod(dims_) * _DTYPE_BYTES.get(dt_, 0))
+                # traffic-faithful special cases: slicing reads only the
+                # slice; scatters/in-place updates touch only the update
+                # region (XLA aliases the target buffer).
+                if opcode in ("dynamic-slice", "slice"):
+                    b = 2 * res_b
+                elif opcode == "gather":
+                    b = 2 * res_b + (ops_b[1] if len(ops_b) > 1 else 0)
+                elif opcode in ("scatter", "dynamic-update-slice"):
+                    b = 2 * sum(ops_b[1:])
+                elif opcode == "fusion" and "kind=kLoop" in raw:
+                    # elementwise (kLoop) fusions read at most O(result)
+                    # per operand; larger operands are sliced inside the
+                    # fusion (dynamic-slice of K/V inside attention loops
+                    # would otherwise count the FULL cache per iteration)
+                    b = res_b + sum(min(o, 2 * res_b) for o in ops_b)
+                    if res_b and res_b in ops_b:
+                        b -= res_b
+                else:
+                    b = res_b + sum(ops_b)
+                    # alias heuristic: an operand with the result's exact
+                    # byte size is usually donated/updated in place — count
+                    # it once, not twice (decode caches, optimizer buffers)
+                    if res_b and res_b in ops_b:
+                        b -= res_b
+                st.bytes += b
+        dm = _DOT.search(raw)
+        if dm:
+            _, rdims = _parse_shape(dm.group(1))
+            cm = _LHS_CDIMS.search(raw)
+            contract = 1
+            if cm:
+                lhs = dm.group(2).split(",")[0].strip().lstrip("%")
+                lshape = shapes.get(lhs, ("f32", ()))[1]
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lshape):
+                        contract *= lshape[int(idx)]
+            st.flops += 2.0 * _prod(rdims) * contract
+            continue
+        cv = _CONV.search(raw)
+        if cv:
+            _, rdims = _parse_shape(cv.group(1))
+            ops = [o.strip().lstrip("%") for o in cv.group(2).split(",")]
+            ker, out_feat = 1, 1
+            if len(ops) >= 2:
+                kshape = shapes.get(ops[1], ("f32", ()))[1]
+                ker = _prod(kshape)
+                dl = _DIMLBL.search(raw)
+                if dl and kshape:
+                    opos = dl.group(2).find("o")
+                    if 0 <= opos < len(kshape):
+                        out_feat = kshape[opos]
+            st.flops += 2.0 * _prod(rdims) * ker / max(out_feat, 1)
+            continue
+        cl = _COLL.search(raw)
+        if cl and "-done(" not in raw:
+            base = cl.group(2)
+            b = _shape_bytes(cl.group(1))
+            st.coll[base] = st.coll.get(base, 0.0) + b
+            continue
+        if _WHILE.search(raw):
+            bm = _BODY.search(raw)
+            tm = _TRIP.search(raw)
+            if bm:
+                st.calls.append((bm.group(1),
+                                 int(tm.group(1)) if tm else None, "loop"))
+            continue
+        cm2 = _CALLS.search(raw)
+        if cm2:
+            st.calls.append((cm2.group(1), 1, "fusion"))
+        ta = _TOAPPLY.search(raw)
+        if ta:
+            st.calls.append((ta.group(1), 1, "fusion"))
+        bm2 = _BRANCHES.search(raw)
+        if bm2:
+            for b in bm2.group(1).split(","):
+                st.calls.append((b.strip().lstrip("%"), 1, "loop"))
+    return comps, entry
+
+
+def module_totals(hlo_text: str, unknown_trip_hint: int = 1
+                  ) -> Dict[str, object]:
+    """Total flops + collective bytes, loop-trip scaled from the entry."""
+    comps, entry = parse_module(hlo_text)
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        st = comps.get(name)
+        if st is None or depth > 64:
+            return 0.0, 0.0, {}
+        memo[name] = (0.0, 0.0, {})      # cycle guard
+        fl = st.flops
+        by = st.bytes
+        coll = dict(st.coll)
+        for callee, trips, kind in st.calls:
+            t = trips if trips is not None else unknown_trip_hint
+            cf, cb, cc = total(callee, depth + 1)
+            fl += t * cf
+            if kind == "loop":           # fusion bodies are in-register
+                by += t * cb
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0.0) + t * v
+        memo[name] = (fl, by, coll)
+        return memo[name]
+
+    if entry is None:
+        fl = sum(c.flops for c in comps.values())
+        by = sum(c.bytes for c in comps.values())
+        coll: Dict[str, float] = {}
+        for c in comps.values():
+            for k, v in c.coll.items():
+                coll[k] = coll.get(k, 0.0) + v
+        return {"flops": fl, "bytes": by, "collectives": coll}
+    fl, by, coll = total(entry)
+    return {"flops": fl, "bytes": by, "collectives": coll,
+            "collective_bytes": sum(coll.values())}

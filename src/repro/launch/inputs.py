@@ -1,0 +1,38 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input of an
+(arch x shape) cell — weak-type-correct, shardable, no device allocation.
+
+``[audio]``/``[vlm]`` archs take precomputed frame/patch embeddings (the
+modality frontend is a stub per the assignment)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.cache import model_cache_spec
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, kind: str) -> Dict:
+    b = shape.global_batch
+    s = shape.seq_len if kind != "decode" else 1
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.frontend is not None:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if kind == "train":
+        out["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """All step inputs for the cell (excluding params/opt state)."""
+    kind = shape.kind
+    specs = {"batch": batch_specs(cfg, shape, kind)}
+    if kind == "decode":
+        specs["cache"] = model_cache_spec(cfg, shape.global_batch, shape.seq_len)
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return specs

@@ -1,0 +1,217 @@
+"""Sealed-decode dry-run: the paper's own scenario measured on compiled
+512/256-chip artifacts (EXPERIMENTS.md §Perf hillclimb #1).
+
+The serve step decrypts the HBM-resident ciphertext weights in-graph every
+step. Variants map to the paper's schemes:
+
+  baseline   — plaintext weights (paper's insecure Baseline)
+  counter    — counter-mode, separate counter tables, FULL encryption
+  coloe      — ColoE (counters inline), FULL encryption
+  coloe_se   — ColoE + Smart Encryption at ratio r with LAYOUT SPLITTING:
+               ciphertext rows stored contiguously so the keystream is
+               generated for exactly r of the bytes (beyond-paper: the
+               paper's memory controller sees interleaved lines; we
+               re-layout at rest). Plaintext rows skip the engine entirely.
+
+Masks are synthesized structurally (first ceil(r*rows) rows of each SE
+leaf), so the whole pipeline works from ShapeDtypeStructs — no 2.5B-param
+allocation.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, SealConfig
+from repro.configs import get_config
+from repro.core import cipher as C
+from repro.core import coloe as CL
+from repro.core import plan as PL
+from repro.launch import hlo_stats
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.sharding import rules
+from repro.sharding.api import use_mesh
+
+KEYW = np.frombuffer(bytes(range(32)), np.uint32)
+
+
+def _leaf_lines(leaf) -> int:
+    words = -(-leaf.size * leaf.dtype.itemsize // 4)
+    return -(-words // CL.WORDS_PER_LINE)
+
+
+def synthetic_masks(pspec, seal: SealConfig):
+    """Structural SE masks (first ceil(r*rows) rows) per leaf; None=full."""
+    plans = {}
+    flat = jax.tree_util.tree_flatten_with_path(pspec)[0]
+    for kp, leaf in flat:
+        path = "/".join(PL._path_tuple(kp))
+        cls = PL._classify(PL._path_tuple(kp), leaf.ndim)
+        boundary = path.split("/")[0] in ("embed", "head")
+        if cls is None or seal.smart_ratio >= 1.0 or boundary:
+            plans[path] = None          # fully encrypted
+        else:
+            plans[path] = seal.smart_ratio
+    return plans
+
+
+def sealed_decode_variant(arch: str, shape_name: str, variant: str,
+                          ratio: float = 0.5, multi_pod: bool = False):
+    """Lower+compile one sealed-decode variant; return parser stats."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pspec = T.param_spec(cfg)
+    p_ps = rules.param_pspecs(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    c_sh = rules.to_named(mesh, rules.cache_pspecs(
+        cfg, mesh, shape.global_batch, shape.seq_len))
+    b_sh = rules.to_named(mesh, rules.batch_pspecs(cfg, mesh, "decode"))
+    dpsz = np.prod([s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+                    if a in ("pod", "data")])
+    b_sh = jax.tree.map(
+        lambda s, sh: NamedSharding(mesh, P(*([None] * len(s.shape))))
+        if s.shape[0] % dpsz else sh, specs["batch"], b_sh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pspec)
+    seal = SealConfig(mode="coloe", smart_ratio=ratio)
+    ratios = synthetic_masks(pspec, seal)
+
+    # --- build ciphertext buffer SPECS + the in-graph decrypt ---
+    buf_specs, buf_shard, meta = {}, {}, {}
+    for kp, leaf in flat:
+        path = "/".join(PL._path_tuple(kp))
+        lines = _leaf_lines(leaf)
+        r = ratios[path]
+        if variant == "baseline":
+            enc_lines, plain_lines, streams = 0, lines, 1
+        elif variant in ("counter", "coloe"):
+            enc_lines, plain_lines = lines, 0
+            streams = 2 if variant == "counter" else 1
+        else:                            # coloe_se: layout-split
+            enc_lines = lines if r is None else -(-int(lines * r) // 1)
+            plain_lines = lines - enc_lines
+            streams = 1
+        words_per = (CL.COLOE_LINE_WORDS
+                     if variant in ("coloe", "coloe_se") else CL.WORDS_PER_LINE)
+        d = {}
+        if enc_lines:
+            d["ct"] = jax.ShapeDtypeStruct((enc_lines, words_per), jnp.uint32)
+        if plain_lines:
+            d["pt"] = jax.ShapeDtypeStruct((plain_lines, CL.WORDS_PER_LINE),
+                                           jnp.uint32)
+        if variant == "counter" and enc_lines:
+            d["ctr"] = jax.ShapeDtypeStruct((enc_lines,), jnp.uint32)
+        buf_specs[path] = d
+        # each device holds its slice of the ciphertext image (lines over
+        # `data`); decryption is local, the plaintext gathers afterwards —
+        # exactly the per-chip decrypt-on-use deployment.
+        dsz = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        buf_shard[path] = {
+            k: NamedSharding(mesh, P("data" if v.shape[0] % dsz == 0 else None,
+                                     *([None] * (v.ndim - 1))))
+            for k, v in d.items()}
+        meta[path] = (leaf.shape, leaf.dtype, lines, enc_lines)
+
+    key_words = jnp.asarray(KEYW)
+
+    def unseal(buffers):
+        leaves = []
+        for kp, leaf in flat:
+            path = "/".join(PL._path_tuple(kp))
+            shape_, dtype_, lines, enc_lines = meta[path]
+            parts = []
+            b = buffers[path]
+            if enc_lines:
+                ct = b["ct"]
+                if variant in ("coloe", "coloe_se"):
+                    data, wc, _ = CL.coloe_unpack(ct)
+                else:
+                    data, wc = ct, b["ctr"]
+                addr = jnp.arange(enc_lines, dtype=jnp.uint32)
+                from repro.core.engine import _line_otp
+                otp = _line_otp(key_words, addr, wc & jnp.uint32(0x7FFFFFFF),
+                                (1, 2))
+                parts.append(data ^ otp)
+            if lines - enc_lines:
+                parts.append(b["pt"])
+            words = jnp.concatenate(parts, 0).reshape(-1) if parts else None
+            from repro.core.engine import words_to_tensor
+            n_words = -(-int(np.prod(shape_)) * jnp.dtype(dtype_).itemsize // 4)
+            leaves.append(words_to_tensor(words[:n_words], shape_, dtype_))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def step(buffers, cache, batch, pos):
+        params = unseal(buffers) if variant != "baseline" else \
+            jax.tree_util.tree_unflatten(
+                treedef, [words_to_plain(buffers, kp) for kp, _ in flat])
+        return T.decode_step(cfg, params, cache, batch, pos)
+
+    def words_to_plain(buffers, kp):
+        from repro.core.engine import words_to_tensor
+        path = "/".join(PL._path_tuple(kp))
+        shape_, dtype_, lines, _ = meta[path]
+        n_words = -(-int(np.prod(shape_)) * jnp.dtype(dtype_).itemsize // 4)
+        return words_to_tensor(buffers[path]["pt"].reshape(-1)[:n_words],
+                               shape_, dtype_)
+
+    t0 = time.time()
+    with use_mesh(mesh, rules.arch_rules(cfg, mesh)):
+        jf = jax.jit(step, in_shardings=(buf_shard, c_sh, b_sh,
+                                         NamedSharding(mesh, P())),
+                     donate_argnums=(1,))
+        lowered = jf.lower(buf_specs, specs["cache"], specs["batch"],
+                           specs["pos"])
+        compiled = lowered.compile()
+    txt = compiled.as_text()
+    stats = hlo_stats.module_totals(txt)
+    ma = compiled.memory_analysis()
+    stored = sum(
+        (m[3] * (CL.COLOE_LINE_WORDS if variant in ("coloe", "coloe_se")
+                 else CL.WORDS_PER_LINE) + (m[2] - m[3]) * CL.WORDS_PER_LINE
+         + (m[3] * 2 if variant == "counter" else 0)) * 4
+        for m in meta.values())
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant, "ratio": ratio,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_device": stats["flops"],
+        "bytes_per_device": stats["bytes"],
+        "collective_bytes_per_device": sum(stats["collectives"].values()),
+        "stored_param_bytes_global": stored,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "arg_gib": ma.argument_size_in_bytes / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_2b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--ratio", type=float, default=0.5)
+    ap.add_argument("--out", default="results/sealed_decode.json")
+    args = ap.parse_args()
+    variants = (["baseline", "counter", "coloe", "coloe_se"]
+                if args.variant == "all" else [args.variant])
+    out = []
+    for v in variants:
+        rec = sealed_decode_variant(args.arch, args.shape, v, args.ratio)
+        print(json.dumps(rec))
+        out.append(rec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

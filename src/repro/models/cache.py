@@ -1,0 +1,109 @@
+"""Decode-time state: KV caches (global + sliding-window ring buffers),
+RG-LRU recurrent state, SSD state, causal-conv tails.
+
+All caches are plain pytrees of arrays so they pass through jit/pjit/scan.
+Invalid KV slots carry position 2**30 so the causal mask hides them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+INVALID_POS = 2**30
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, kind: str):
+    """ShapeDtypeStructs for one attention layer's cache."""
+    if kind == "local_attn" and cfg.window:
+        cache_len = min(cache_len, cfg.window)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "pos": jax.ShapeDtypeStruct((cache_len,), jnp.int32),
+    }
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, cache_len: int, kind: str):
+    spec = attn_cache_spec(cfg, batch, cache_len, kind)
+    return {
+        "k": jnp.zeros(spec["k"].shape, spec["k"].dtype),
+        "v": jnp.zeros(spec["v"].shape, spec["v"].dtype),
+        "pos": jnp.full(spec["pos"].shape, INVALID_POS, jnp.int32),
+    }
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int):
+    w = cfg.rglru_block_width or cfg.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, w), jnp.dtype(cfg.dtype)),
+    }
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int):
+    s = rglru_cache_spec(cfg, batch)
+    return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), s)
+
+
+def ssd_cache_spec(cfg: ModelConfig, batch: int):
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, p, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di + 2 * n),
+                                     jnp.dtype(cfg.dtype)),
+    }
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int):
+    s = ssd_cache_spec(cfg, batch)
+    return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), s)
+
+
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    if kind in ("attn", "local_attn"):
+        return attn_cache_spec(cfg, batch, cache_len, kind)
+    if kind == "rglru":
+        return rglru_cache_spec(cfg, batch)
+    if kind == "ssd":
+        return ssd_cache_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    if kind in ("attn", "local_attn"):
+        return attn_cache_init(cfg, batch, cache_len, kind)
+    if kind == "rglru":
+        return rglru_cache_init(cfg, batch)
+    if kind == "ssd":
+        return ssd_cache_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def _stack_spec(specs):
+    return jax.tree.map(
+        lambda *xs: jax.ShapeDtypeStruct((len(xs),) + xs[0].shape, xs[0].dtype),
+        *specs)
+
+
+def model_cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    """Cache pytree spec: tuple over pattern positions of stacked (n_super, ...)."""
+    n = cfg.n_superblocks()
+    out = []
+    for kind in cfg.pattern:
+        one = block_cache_spec(cfg, kind, batch, cache_len)
+        out.append(_stack_spec([one] * n))
+    return tuple(out)
+
+
+def model_cache_init(cfg: ModelConfig, batch: int, cache_len: int):
+    n = cfg.n_superblocks()
+    out = []
+    for kind in cfg.pattern:
+        one = block_cache_init(cfg, kind, batch, cache_len)
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one))
+    return tuple(out)

@@ -1,0 +1,168 @@
+"""VGG-16 / ResNet-18 / ResNet-34 in pure JAX — the paper's evaluation CNNs.
+
+Used by (a) the security evaluation (substitute models, Figs 8-9) and
+(b) the analytic traffic model (per-layer weight / feature-map byte counts
+feeding the IPC figures). Channel-wise LayerNorm replaces BatchNorm to keep
+training purely functional (noted deviation; does not affect the SEAL
+mechanism, which only touches weight/feature-map *storage*).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import CNNConfig, ConvSpec
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    return (jax.random.normal(key, (k, k, cin, cout)) *
+            jnp.sqrt(2.0 / fan_in)).astype(jnp.float32)
+
+
+def init_cnn(cfg: CNNConfig, key):
+    params: List[dict] = []
+    ch, size = cfg.in_ch, cfg.img_size
+    flat_dim = None
+    for i, sp in enumerate(cfg.stages):
+        ki = jax.random.fold_in(key, i)
+        if sp.kind == "conv":
+            p = {"w": _conv_init(ki, sp.kernel, ch, sp.out_ch),
+                 "b": jnp.zeros((sp.out_ch,), jnp.float32),
+                 "ln_s": jnp.ones((sp.out_ch,), jnp.float32),
+                 "ln_b": jnp.zeros((sp.out_ch,), jnp.float32)}
+            if sp.residual and (sp.stride != 1 or sp.out_ch != ch):
+                p["proj"] = _conv_init(jax.random.fold_in(ki, 1), 1, ch, sp.out_ch)
+            params.append(p)
+            ch = sp.out_ch
+            size = -(-size // sp.stride)
+        elif sp.kind == "pool":
+            params.append({})
+            size = -(-size // sp.stride)
+        else:  # fc
+            if flat_dim is None:
+                flat_dim = ch  # global average pool -> (B, ch)
+            p = {"w": (jax.random.normal(ki, (flat_dim, sp.out_ch)) *
+                       jnp.sqrt(2.0 / flat_dim)).astype(jnp.float32),
+                 "b": jnp.zeros((sp.out_ch,), jnp.float32)}
+            params.append(p)
+            flat_dim = sp.out_ch
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _conv2d(x, w, stride):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _chan_ln(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * s + b
+
+
+def cnn_forward(cfg: CNNConfig, params, x):
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    i = 0
+    stages = cfg.stages
+    n = len(stages)
+    flat = None
+    while i < n:
+        sp = stages[i]
+        p = params[i]
+        if sp.kind == "conv" and sp.residual:
+            # residual pair (ResNets): conv-ln-relu-conv-ln + skip
+            sp2, p2 = stages[i + 1], params[i + 1]
+            h = _conv2d(x, p["w"], sp.stride) + p["b"]
+            h = jax.nn.relu(_chan_ln(h, p["ln_s"], p["ln_b"]))
+            h = _conv2d(h, p2["w"], sp2.stride) + p2["b"]
+            h = _chan_ln(h, p2["ln_s"], p2["ln_b"])
+            skip = x if "proj" not in p else _conv2d(x, p["proj"], sp.stride)
+            x = jax.nn.relu(h + skip)
+            i += 2
+        elif sp.kind == "conv":
+            h = _conv2d(x, p["w"], sp.stride) + p["b"]
+            x = jax.nn.relu(_chan_ln(h, p["ln_s"], p["ln_b"]))
+            i += 1
+        elif sp.kind == "pool":
+            x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "SAME")
+            i += 1
+        else:  # fc
+            if flat is None:
+                flat = jnp.mean(x, axis=(1, 2))       # global average pool
+            flat = flat @ p["w"] + p["b"]
+            if i < n - 1:
+                flat = jax.nn.relu(flat)
+            i += 1
+    return flat
+
+
+def cnn_loss(cfg: CNNConfig, params, batch):
+    logits = cnn_forward(cfg, params, batch["x"])
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, acc
+
+
+# --------------------------------------------------------------------------
+# traffic accounting for the analytic perf model (paper Figs 10-15)
+# --------------------------------------------------------------------------
+
+def layer_traffic(cfg: CNNConfig, dtype_bytes: int = 4) -> List[dict]:
+    """Per-layer byte counts: weights, input FM, output FM.
+
+    Mirrors the paper's Figure-4 accounting: a CONV layer reads its input
+    feature maps + weights and writes output feature maps; POOL reads/writes
+    FMs with no weights; FC reads a vector + weight matrix.
+    """
+    out: List[dict] = []
+    ch, size = cfg.in_ch, cfg.img_size
+    flat_dim = None
+    for sp in cfg.stages:
+        if sp.kind == "conv":
+            in_fm = size * size * ch
+            size2 = -(-size // sp.stride)
+            out_fm = size2 * size2 * sp.out_ch
+            w = sp.kernel * sp.kernel * ch * sp.out_ch
+            # MACs: out positions x kernel volume
+            macs = out_fm * sp.kernel * sp.kernel * ch
+            out.append(dict(kind="conv", in_ch=ch, out_ch=sp.out_ch,
+                            weight_bytes=w * dtype_bytes,
+                            in_fm_bytes=in_fm * dtype_bytes,
+                            out_fm_bytes=out_fm * dtype_bytes, macs=macs))
+            ch, size = sp.out_ch, size2
+        elif sp.kind == "pool":
+            in_fm = size * size * ch
+            size = -(-size // sp.stride)
+            out_fm = size * size * ch
+            out.append(dict(kind="pool", in_ch=ch, out_ch=ch,
+                            weight_bytes=0,
+                            in_fm_bytes=in_fm * dtype_bytes,
+                            out_fm_bytes=out_fm * dtype_bytes,
+                            macs=out_fm * 4))
+        else:
+            if flat_dim is None:
+                flat_dim = ch
+            w = flat_dim * sp.out_ch
+            out.append(dict(kind="fc", in_ch=flat_dim, out_ch=sp.out_ch,
+                            weight_bytes=w * dtype_bytes,
+                            in_fm_bytes=flat_dim * dtype_bytes,
+                            out_fm_bytes=sp.out_ch * dtype_bytes, macs=w))
+            flat_dim = sp.out_ch
+    return out

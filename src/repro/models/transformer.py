@@ -1,0 +1,185 @@
+"""Top-level LM: init / forward (train) / prefill / decode.
+
+Layers are stacked per pattern-position and iterated with ``jax.lax.scan``
+over super-blocks, so HLO size and compile time are O(1) in depth — this is
+what keeps the 512-device dry-runs tractable for 62-layer models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.cache import model_cache_init, model_cache_spec
+from repro.sharding.api import constrain
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    n = cfg.n_superblocks()
+    ke, kh, kf, kb = jax.random.split(key, 4)
+    params = {
+        "embed": {"w": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model))
+                        * cfg.d_model ** -0.5).astype(jnp.float32)},
+        "final_norm": L.init_norm(cfg, kf),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size))
+                                * cfg.d_model ** -0.5).astype(jnp.float32)}
+    per_position = []
+    for j, kind in enumerate(cfg.pattern):
+        stacked = [B.init_block(cfg, kind, jax.random.fold_in(kb, i * 131 + j))
+                   for i in range(n)]
+        per_position.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked))
+    params["blocks"] = tuple(per_position)
+    return params
+
+
+def param_spec(cfg: ModelConfig):
+    """Shape/dtype pytree of the params, without allocating (for dry-runs)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# --------------------------------------------------------------------------
+# shared backbone
+# --------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, batch):
+    dt = L.cdtype(cfg)
+    if cfg.frontend is not None:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = jnp.take(params["embed"]["w"].astype(dt), batch["tokens"], axis=0)
+    return constrain(x, "batch", None, None)
+
+
+def _unembed(cfg: ModelConfig, params, x):
+    dt = L.cdtype(cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(dt),
+                            params["embed"]["w"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(dt),
+                            params["head"]["w"].astype(dt))
+    logits = constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+    return L.softcap(logits, cfg.logit_softcap)
+
+
+def _run_layers(cfg: ModelConfig, params, x, positions, mode, cache, remat: str):
+    """Scan the super-block stack. Returns (x, new_cache, aux)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        if mode == "decode" or mode == "prefill":
+            p_slices, c_slices = xs
+        else:
+            p_slices, c_slices = xs, tuple(None for _ in cfg.pattern)
+        new_caches = []
+        for j, kind in enumerate(cfg.pattern):
+            cj = c_slices[j] if c_slices[j] is not None else None
+            h, nc, a = B.block_apply(cfg, kind, p_slices[j], h, positions, mode, cj)
+            aux = aux + a
+            new_caches.append(nc)
+        ys = tuple(new_caches) if mode in ("prefill", "decode") else 0
+        return (h, aux), ys
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "save_carries":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names())
+
+    if mode == "decode":
+        xs = (params["blocks"], cache)
+    elif mode == "prefill":
+        # prefill consumes an (empty) cache pytree to define slot shapes
+        xs = (params["blocks"], cache)
+    else:
+        xs = params["blocks"]
+
+    (x, aux), ys = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_cache = ys if mode in ("prefill", "decode") else None
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# train / prefill / decode entry points
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch, *, remat: str = "none"):
+    """Training/eval forward. batch: {tokens|embeds, targets}. Returns
+    (loss, metrics) with CE loss in f32."""
+    x = _embed(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, _, aux = _run_layers(cfg, params, x, positions, "train", None, remat)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux,
+                  "accuracy": jnp.mean(jnp.argmax(logits, -1) == targets)}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int):
+    """Run the prompt, return (logits_last, cache). batch: {tokens|embeds}."""
+    x = _embed(cfg, params, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    cache0 = model_cache_init(cfg, b, cache_len)
+    x, cache, _ = _run_layers(cfg, params, x, positions, "prefill", cache0, "none")
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x[:, -1:])
+    return logits[:, 0], cache
+
+
+def apply_cache_updates(cfg: ModelConfig, cache, updates, pos):
+    """Merge the scan's per-layer decode update records into the cache.
+
+    Attention layers emit {k_new, v_new} (written at slot = pos %
+    cache_len — ring semantics for sliding windows); recurrent/SSD layers
+    emit their full (tiny) new state.
+    """
+    new = []
+    for j, kind in enumerate(cfg.pattern):
+        cj, uj = cache[j], updates[j]
+        if kind in ("attn", "local_attn"):
+            cache_len = cj["k"].shape[2]
+            slot = pos % cache_len
+            new.append({
+                "k": cj["k"].at[:, :, slot].set(uj["k_new"][:, :, 0]),
+                "v": cj["v"].at[:, :, slot].set(uj["v_new"][:, :, 0]),
+                "pos": cj["pos"].at[:, slot].set(pos),
+            })
+        else:
+            new.append(uj)
+    return tuple(new)
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch, pos):
+    """One serve step: new token(s) at position ``pos`` against the cache.
+
+    batch: {tokens: (B,1)} or {embeds: (B,1,D)}; pos: scalar int32.
+    Returns (logits (B, V), new_cache, next_token (B,)).
+    """
+    x = _embed(cfg, params, batch)
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, updates, _ = _run_layers(cfg, params, x, positions, "decode", cache, "none")
+    cache = apply_cache_updates(cfg, cache, updates, pos)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)[:, 0]
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return logits, cache, next_token

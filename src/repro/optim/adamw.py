@@ -1,0 +1,53 @@
+"""Functional AdamW with global-norm clipping. Params f32; m/v f32 and
+sharded like the params (rules.opt_pspecs), so the optimizer is ZeRO-style
+partitioned for free."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def init(params):
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(params, opt_state, grads, lr, tc: TrainConfig):
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = opt_state["step"] + 1
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v, g):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        newp = p - lr * (mh / (jnp.sqrt(vh) + tc.eps) + tc.weight_decay * p)
+        return newp.astype(p.dtype), m, v
+
+    pf, treedef = jax.tree.flatten(params)
+    mf = treedef.flatten_up_to(opt_state["m"])
+    vf = treedef.flatten_up_to(opt_state["v"])
+    gf = treedef.flatten_up_to(grads)
+    res = [upd(p, m, v, g) for p, m, v, g in zip(pf, mf, vf, gf)]
+    newp = treedef.unflatten([r[0] for r in res])
+    newm = treedef.unflatten([r[1] for r in res])
+    newv = treedef.unflatten([r[2] for r in res])
+    return newp, {"m": newm, "v": newv, "step": step}, gnorm

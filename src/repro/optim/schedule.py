@@ -1,0 +1,16 @@
+"""Warmup + cosine decay LR schedule."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_at(step, tc: TrainConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(tc.warmup_steps, 1))
+    t = jnp.clip((step - tc.warmup_steps) /
+                 max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    floor = 0.1
+    return tc.learning_rate * warm * (floor + (1 - floor) * cos)

@@ -1,0 +1,165 @@
+"""Fault-tolerance machinery for 1000+ node runs.
+
+Components (all host-side, framework-agnostic to the jit'd step):
+
+* ``Heartbeat``     — per-host liveness file + stale-peer detection. On a
+  real cluster the file lives on shared storage (GCS/NFS); a coordinator
+  (or every peer, symmetrically) notices a host whose heartbeat is older
+  than ``timeout`` and triggers the restart path.
+* ``StepWatchdog``  — straggler mitigation: wall-clock deadline per step
+  derived from a running P99; a blown deadline raises ``StragglerTimeout``
+  so the driver can checkpoint + re-mesh without the slow host.
+* ``retry``         — bounded-retry decorator with exponential backoff for
+  transient errors (preemption notices, flaky storage).
+* ``PreemptionGuard`` — SIGTERM handler: flips a flag the train loop polls
+  to checkpoint-and-exit cleanly inside the grace period.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+
+class StragglerTimeout(RuntimeError):
+    pass
+
+
+class HostFailure(RuntimeError):
+    pass
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host_id: str, interval: float = 5.0,
+                 timeout: float = 30.0):
+        self.dir = directory
+        self.host_id = host_id
+        self.interval = interval
+        self.timeout = timeout
+        os.makedirs(directory, exist_ok=True)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _path(self, host: str) -> str:
+        return os.path.join(self.dir, f"hb_{host}.json")
+
+    def beat(self, step: int = -1):
+        tmp = self._path(self.host_id) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host_id, "time": time.time(),
+                       "step": step}, f)
+        os.replace(tmp, self._path(self.host_id))
+
+    def start(self):
+        def loop():
+            while not self._stop.is_set():
+                self.beat()
+                self._stop.wait(self.interval)
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+
+    def alive_hosts(self) -> Dict[str, dict]:
+        now = time.time()
+        out = {}
+        for f in os.listdir(self.dir):
+            if not f.startswith("hb_") or f.endswith(".tmp"):
+                continue
+            try:
+                with open(os.path.join(self.dir, f)) as fh:
+                    rec = json.load(fh)
+            except (json.JSONDecodeError, OSError):
+                continue
+            if now - rec["time"] <= self.timeout:
+                out[rec["host"]] = rec
+        return out
+
+    def dead_hosts(self) -> Dict[str, dict]:
+        now = time.time()
+        out = {}
+        for f in os.listdir(self.dir):
+            if not f.startswith("hb_") or f.endswith(".tmp"):
+                continue
+            try:
+                with open(os.path.join(self.dir, f)) as fh:
+                    rec = json.load(fh)
+            except (json.JSONDecodeError, OSError):
+                continue
+            if now - rec["time"] > self.timeout:
+                out[rec["host"]] = rec
+        return out
+
+
+class StepWatchdog:
+    """Raise StragglerTimeout when a step exceeds margin x running-P99."""
+
+    def __init__(self, margin: float = 3.0, warmup_steps: int = 5,
+                 hard_limit_s: float = 0.0):
+        self.margin = margin
+        self.warmup = warmup_steps
+        self.hard = hard_limit_s
+        self._durations = []
+
+    def deadline(self) -> float:
+        if len(self._durations) < self.warmup:
+            return self.hard or float("inf")
+        d = sorted(self._durations)
+        p99 = d[min(len(d) - 1, int(0.99 * len(d)))]
+        dl = self.margin * p99
+        return min(dl, self.hard) if self.hard else dl
+
+    def observe(self, duration: float):
+        self._durations.append(duration)
+        if len(self._durations) > 512:
+            self._durations = self._durations[-256:]
+
+    def check(self, duration: float):
+        dl = self.deadline()
+        self.observe(duration)
+        if duration > dl:
+            raise StragglerTimeout(
+                f"step took {duration:.2f}s > deadline {dl:.2f}s")
+
+
+def retry(n: int = 3, backoff: float = 0.5,
+          exceptions=(IOError, OSError)) -> Callable:
+    def deco(fn):
+        def wrapped(*a, **kw):
+            delay = backoff
+            for i in range(n):
+                try:
+                    return fn(*a, **kw)
+                except exceptions:
+                    if i == n - 1:
+                        raise
+                    time.sleep(delay)
+                    delay *= 2
+        wrapped.__name__ = fn.__name__
+        return wrapped
+    return deco
+
+
+class PreemptionGuard:
+    """SIGTERM -> requested flag; the loop checkpoints and exits cleanly."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        self._prev = None
+        if install:
+            try:
+                self._prev = signal.signal(signal.SIGTERM, self._handler)
+            except ValueError:          # not in main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def trigger(self):                  # for tests
+        self.requested = True

@@ -1,0 +1,125 @@
+"""Batched serving engine with sealed-weight support.
+
+Request lifecycle: submit(prompt tokens) -> queued -> joined into the next
+prefill batch -> decoded step-by-step in the shared decode batch until EOS
+or max_tokens. Synchronous-batching design (one prefill + one decode batch
+in flight) — the right scale for an edge accelerator per the paper; the
+scheduler slot-fills finished requests each step (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SealConfig
+from repro.core import sealed_store as SS
+from repro.models import transformer as T
+from repro.models.cache import model_cache_init
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                # (S,) int32
+    max_tokens: int = 32
+    eos: int = -1
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 256, seal: Optional[SealConfig] = None,
+                 key_bytes: bytes = bytes(range(32))):
+        assert cfg.frontend is None, "serving demo targets token archs"
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.seal = seal
+        if seal is not None and seal.mode != "none":
+            self.sealed = SS.seal_params(params, seal, key_bytes)
+            buffers = self.sealed.buffers
+            meta = self.sealed
+
+            def _decode(bufs, cache, batch, pos):
+                sp = SS.SealedParams(bufs, meta.metas, meta.plans,
+                                     meta.treedef, meta.seal)
+                p = SS.unseal_params(sp, key_bytes)
+                return T.decode_step(cfg, p, cache, batch, pos)
+
+            def _prefill_one(bufs, batch):
+                sp = SS.SealedParams(bufs, meta.metas, meta.plans,
+                                     meta.treedef, meta.seal)
+                p = SS.unseal_params(sp, key_bytes)
+                return T.prefill(cfg, p, batch, self.max_len)
+
+            self._params_arg = buffers
+            self._decode = jax.jit(_decode)
+            self._prefill = jax.jit(_prefill_one)
+        else:
+            self.sealed = None
+            self._params_arg = params
+            self._decode = jax.jit(
+                lambda p, cache, batch, pos: T.decode_step(cfg, p, cache, batch, pos))
+            self._prefill = jax.jit(
+                lambda p, batch: T.prefill(cfg, p, batch, self.max_len))
+        self._next_rid = 0
+        self.queue: List[Request] = []
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+    def submit(self, prompt, max_tokens: int = 32, eos: int = -1) -> Request:
+        r = Request(self._next_rid, np.asarray(prompt, np.int32), max_tokens, eos)
+        self._next_rid += 1
+        self.queue.append(r)
+        return r
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns completed requests."""
+        done: List[Request] = []
+        while self.queue:
+            group = self.queue[:self.slots]
+            self.queue = self.queue[self.slots:]
+            done.extend(self._run_group(group))
+        return done
+
+    def _run_group(self, group: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        b = len(group)
+        plen = max(len(r.prompt) for r in group)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(group):          # left-pad-free: right align
+            toks[i, plen - len(r.prompt):] = r.prompt
+        logits, cache = self._prefill(self._params_arg, {"tokens": jnp.asarray(toks)})
+        self.stats["prefills"] += 1
+        nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        for i, r in enumerate(group):
+            r.out.append(int(nxt[i]))
+        pos = plen
+        max_new = max(r.max_tokens for r in group)
+        for t in range(1, max_new):
+            if pos >= self.max_len:
+                break
+            batch = {"tokens": jnp.asarray(nxt[:, None])}
+            logits, cache, tok = self._decode(self._params_arg, cache, batch,
+                                              jnp.int32(pos))
+            self.stats["decode_steps"] += 1
+            nxt = np.asarray(tok)
+            pos += 1
+            for i, r in enumerate(group):
+                if r.done:
+                    continue
+                nt = int(nxt[i])
+                r.out.append(nt)
+                self.stats["tokens"] += 1
+                if len(r.out) >= r.max_tokens or nt == r.eos:
+                    r.done = True
+            if all(r.done for r in group):
+                break
+        for r in group:
+            r.done = True
+        return group

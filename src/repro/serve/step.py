@@ -1,0 +1,30 @@
+"""Serve (decode) step factories — incl. the sealed-weights path where the
+HBM-resident model stays ciphertext and is decrypted on use (the paper's
+threat model: plaintext never crosses the probe-able boundary)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import sealed_store as SS
+from repro.models import transformer as T
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch, pos):
+        return T.decode_step(cfg, params, cache, batch, pos)
+    return decode_step
+
+
+def make_sealed_decode_step(cfg: ModelConfig, sp: SS.SealedParams,
+                            key_bytes: bytes):
+    """Decode with in-graph decryption: the jit boundary receives ciphertext
+    buffers; ``unseal_params`` runs on-device every step (its keystream
+    FLOPs are the crypto roofline term; the fused-kernel path in
+    repro.kernels removes the extra HBM round-trip)."""
+    def decode_step(buffers, cache, batch, pos):
+        sp2 = SS.SealedParams(buffers, sp.metas, sp.plans, sp.treedef, sp.seal)
+        params = SS.unseal_params(sp2, key_bytes)
+        return T.decode_step(cfg, params, cache, batch, pos)
+    return decode_step

@@ -1,0 +1,87 @@
+"""Logical-axis activation sharding (MaxText-style, minimal).
+
+Model code calls ``constrain(x, "batch", None, "heads", None)``; when a
+distribution context is active (set by launch/train/dryrun), logical names
+resolve to mesh axes and a ``with_sharding_constraint`` is applied; with no
+context it is an identity, so unit tests and single-device runs never touch
+device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical name -> mesh axis (or tuple of axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,          # used instead of heads when H % model != 0
+    "kv_head_dim": None,
+    "ff": "model",
+    "expert": "model",
+    "moe_ff": "data",
+    "moe_tokens": "data",
+    "vocab": "model",
+    "embed": None,
+    "seq": None,
+    "seq_res": None,          # residual-stream seq sharding (train opt-in)
+    "cache_seq": "model",     # context-parallel decode caches
+    "rnn_width": "model",
+    "ssm_inner": "model",
+}
+
+
+def _active():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict] = None):
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    # drop axes the mesh does not have (e.g. "pod" on a single-pod mesh)
+    names = set(mesh.axis_names)
+
+    def resolve(v):
+        if v is None:
+            return None
+        if isinstance(v, (tuple, list)):
+            kept = tuple(a for a in v if a in names)
+            return kept if kept else None
+        return v if v in names else None
+
+    resolved = {k: resolve(v) for k, v in rules.items()}
+    prev = _active()
+    _state.ctx = (mesh, resolved)
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def logical_spec(*logical_axes) -> Optional[P]:
+    ctx = _active()
+    if ctx is None:
+        return None
+    _, rules = ctx
+    return P(*[rules.get(a) if a is not None else None for a in logical_axes])
+
+
+def constrain(x, *logical_axes):
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_spec(*logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,226 @@
+"""PartitionSpec tables: params, optimizer state, inputs, caches.
+
+Strategy (DESIGN.md §5): FSDP over ``data`` x TP over ``model`` x DP over
+``pod``. Weight matrices shard their input dim over ``data`` (ZeRO-3 style
+gather-on-use) and their output/head/expert dim over ``model``. Dims that
+do not divide the mesh axis are replicated instead (``_maybe``) — with the
+one deliberate exception of attention heads, where GSPMD's implicit padding
+is cheaper than replication (DESIGN.md hillclimb notes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.cache import model_cache_spec
+
+
+def _maybe(axis: Optional[str], dim: int, size: int):
+    if axis is None:
+        return None
+    if dim % size == 0:
+        return axis
+    return None
+
+
+def arch_rules(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """Per-arch logical-axis overrides: pjit shardings must divide exactly,
+    so archs whose head count doesn't divide the `model` axis shard the
+    head_dim instead (deepseek 56H, gemma2 8H, internvl 14H, musicgen 24H
+    on a 16-way axis), and odd vocabularies replicate their embeddings."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    md = sizes.get("model", 1)
+    rules = {}
+    if cfg.heads_eff and cfg.heads_eff % md:
+        rules["heads"] = None
+        rules["head_dim"] = "model" if cfg.head_dim % md == 0 else None
+    else:
+        rules["head_dim"] = None
+    if cfg.num_kv_heads and cfg.num_kv_heads % md:
+        rules["kv_heads"] = None
+        rules["kv_head_dim"] = "model" if cfg.head_dim % md == 0 else None
+    else:
+        rules["kv_head_dim"] = None
+    if cfg.vocab_size % md:
+        rules["vocab"] = None
+    if cfg.moe is not None and cfg.moe.num_experts % md:
+        rules["expert"] = None
+    return rules
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, serving: bool = False):
+    """PartitionSpec pytree mirroring ``transformer.init_params``.
+
+    serving=True: weights-stationary decode — drop the FSDP (`data`) axis
+    on weight input dims when the TP-sharded copy fits the HBM budget, so
+    decode steps stop all-gathering weights every layer (6 GB/step on the
+    granite decode_32k dry-run)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    md = sizes.get("model", 1)
+    dt = sizes.get("data", 1)
+    no_fsdp = False
+    if serving:
+        per_dev = cfg.param_count() * 4 / max(md, 1)
+        no_fsdp = per_dev <= 4e9  # fits comfortably next to the KV cache
+    pod = sizes.get("pod", 1)
+    # ZeRO-over-pod: block params/opt shard their layer-stack axis across
+    # pods (scan dynamic-slices one layer at a time, so compute sees whole
+    # layers; grads reduce-scatter to the owning pod).
+    stk = "pod" if (pod > 1 and cfg.n_superblocks() % pod == 0) else None
+
+    def fsdp(dim):
+        if no_fsdp:
+            return None
+        return _maybe("data", dim, dt)
+
+    def tp(dim):
+        return _maybe("model", dim, md)
+
+    d, v = cfg.d_model, cfg.vocab_size
+    spec = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+
+    def classify(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        names = [str(n) for n in names]
+        nd = len(leaf.shape)
+        top = names[0]
+        name = names[-1]
+        parent = names[-2] if len(names) >= 2 else ""
+        if top == "embed":
+            if tp(v):
+                return P("model", fsdp(d))
+            # odd vocab (granite/internvl/mamba2): shard d over both axes
+            both = d % (md * dt) == 0
+            return P(None, ("model", "data") if both else (tp(d) or fsdp(d)))
+        if top == "head":
+            return P(fsdp(d), tp(v))
+        if top == "final_norm":
+            return P(*([None] * nd))
+        # block leaves: leading axis = layer stack (never sharded)
+        if parent == "attn":
+            h, kvh, dh = cfg.heads_eff, cfg.num_kv_heads, cfg.head_dim
+            # shard heads over `model` when divisible, else head_dim
+            h_ax, hd_ax = (tp(h), None) if h % md == 0 else (None, tp(dh))
+            kv_ax, kvd_ax = (tp(kvh), None) if kvh % md == 0 else (None, tp(dh))
+            if name == "wq":
+                return P(stk, fsdp(d), h_ax, hd_ax)
+            if name in ("wk", "wv"):
+                return P(stk, fsdp(d), kv_ax, kvd_ax)
+            if name == "wo":
+                return P(stk, h_ax, hd_ax, fsdp(d))
+        if parent == "mlp":
+            f = cfg.d_ff
+            if name == "router":
+                return P(stk, fsdp(d), None)
+            if nd == 4:  # MoE (n, e, din, dout)
+                # 2D expert parallelism: experts over `model`, FF over
+                # `data`. No weight gather at use (the FSDP-on-d variant
+                # all-gathered ~2.4 GB/layer on dbrx); the f-contraction
+                # reduce-scatters instead.
+                e = cfg.moe.num_experts
+                if name in ("wi", "wg"):
+                    return P(stk, tp(e), None, fsdp(f))
+                if name == "wo":
+                    return P(stk, tp(e), fsdp(f), None)
+            if name in ("wi", "wg"):
+                return P(stk, fsdp(d), tp(f))
+            if name == "wo":
+                return P(stk, tp(f), fsdp(d))
+        if parent == "rec":
+            w = cfg.rglru_block_width or d
+            if name in ("w_x", "w_gate"):
+                return P(stk, fsdp(d), tp(w))
+            if name in ("w_rg", "w_ig"):
+                return P(stk, tp(w), None)
+            if name == "w_out":
+                return P(stk, tp(w), fsdp(d))
+            if name == "conv_w":
+                return P(stk, None, tp(w))
+            if name in ("conv_b", "b_rg", "b_ig", "lam"):
+                return P(stk, tp(w))
+        if parent == "ssd":
+            di = cfg.ssm_d_inner
+            z = 2 * di + 2 * cfg.ssm_state + cfg.ssm_heads
+            if name == "w_in":
+                return P(stk, fsdp(d), tp(z))
+            if name == "w_out":
+                return P(stk, tp(di), fsdp(d))
+            if name == "conv_w":
+                return P(stk, None, tp(di + 2 * cfg.ssm_state))
+            if name == "conv_b":
+                return P(stk, tp(di + 2 * cfg.ssm_state))
+            if name == "norm_scale":
+                return P(stk, tp(di))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec)
+    out = [classify(kp, leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_pspecs(cfg: ModelConfig, mesh: Mesh):
+    """AdamW state mirrors the params (m, v) + replicated step counter."""
+    ps = param_pspecs(cfg, mesh)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, kind: str):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if dp else None
+    tok = P(dp, None)
+    emb = P(dp, None, None)
+    out = {}
+    if cfg.frontend is not None:
+        out["embeds"] = emb
+    else:
+        out["tokens"] = tok
+    if kind == "train":
+        out["targets"] = tok
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
+    """Decode caches: batch over dp (when divisible), seq over model
+    (context-parallel decode), tiny recurrent states replicated on model."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp_names:
+        dp_size *= sizes[a]
+    dp = dp_names if (dp_names and batch % dp_size == 0) else None
+    md = sizes.get("model", 1)
+
+    spec = model_cache_spec(cfg, batch, cache_len)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in ("k", "v"):
+            seq = leaf.shape[1]
+            return P(dp, _maybe("model", seq, md), None, None)
+        if name == "pos":
+            return P(_maybe("model", leaf.shape[0], md))
+        if name == "state":      # SSD state (b, h, p, n)
+            return P(dp, None, None, None)
+        if name == "h":          # RG-LRU state (b, w)
+            return P(dp, _maybe("model", leaf.shape[-1], md))
+        if name == "conv":       # conv tail (b, k-1, c)
+            return P(dp, None, _maybe("model", leaf.shape[-1], md))
+        return P(*([None] * len(leaf.shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec)
+    # skip the leading layer-stack axis added by model_cache_spec stacking
+    out = []
+    for kp, leaf in flat:
+        inner = one(kp, jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype))
+        out.append(P(None, *inner))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,88 @@
+"""The production training loop: sharded data, async sealed checkpoints,
+preemption handling, straggler watchdog, restart/elastic-resume."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, rebuild_tree
+from repro.config import ModelConfig, SealConfig, TrainConfig
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.runtime.fault import PreemptionGuard, StepWatchdog, StragglerTimeout
+from repro.runtime.metrics import MetricsLogger
+from repro.sharding import rules
+from repro.sharding.api import use_mesh
+from repro.train.step import make_train_step
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, mesh, *, batch: int, seq: int,
+          steps: Optional[int] = None, seal: Optional[SealConfig] = None,
+          log_path: Optional[str] = None, resume: bool = True,
+          watchdog: Optional[StepWatchdog] = None):
+    """Run (or resume) training; returns (params, opt_state, last_metrics)."""
+    steps = steps if steps is not None else tc.total_steps
+    log = MetricsLogger(log_path)
+    guard = PreemptionGuard()
+    ckpt = CheckpointManager(tc.checkpoint_dir, seal=seal)
+    step_fn = make_train_step(cfg, tc)
+
+    p_sh = rules.to_named(mesh, rules.param_pspecs(cfg, mesh))
+    o_sh = rules.to_named(mesh, rules.opt_pspecs(cfg, mesh))
+    b_sh = rules.to_named(mesh, rules.batch_pspecs(cfg, mesh, "train"))
+
+    start_step = 0
+    with use_mesh(mesh, rules.arch_rules(cfg, mesh)):
+        if resume and ckpt.list_steps():
+            start_step, host = ckpt.restore()
+            pspec = T.param_spec(cfg)
+            params = rebuild_tree(pspec, host["params"], p_sh)
+            opt = rebuild_tree(jax.eval_shape(adamw.init, pspec),
+                               host["opt"], o_sh)
+            log.log(start_step, event="resumed")
+        else:
+            params = jax.device_put(
+                T.init_params(cfg, jax.random.key(tc.seed)), p_sh)
+            opt = jax.device_put(adamw.init(params), o_sh)
+
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+
+        loader = PrefetchLoader(
+            lambda s: lm_batch(cfg, batch, seq, s, seed=tc.seed),
+            start_step=start_step, sharding=b_sh)
+        metrics = {}
+        try:
+            for step, data in loader:
+                if step >= steps:
+                    break
+                t0 = time.time()
+                params, opt, metrics = jitted(params, opt, data)
+                metrics = jax.tree.map(lambda x: np.asarray(x), metrics)
+                dt = time.time() - t0
+                if watchdog is not None:
+                    try:
+                        watchdog.check(dt)
+                    except StragglerTimeout:
+                        ckpt.save(step + 1, params, opt, blocking=True)
+                        raise
+                log.log(step, loss=float(metrics["loss"]),
+                        ce=float(metrics["ce"]), lr=float(metrics["lr"]),
+                        sec=dt)
+                if (step + 1) % tc.checkpoint_every == 0:
+                    ckpt.save(step + 1, params, opt,
+                              blocking=not tc.async_checkpoint)
+                if guard.requested:
+                    ckpt.save(step + 1, params, opt, blocking=True)
+                    log.log(step, event="preempted_clean_exit")
+                    break
+        finally:
+            loader.close()
+            ckpt.wait()
+            log.close()
+    return params, opt, metrics
