@@ -193,6 +193,43 @@ def step_bench():
     return rows
 
 
+def sealed_step_bench():
+    """Sealed decode step: fused decrypt-in-matmul vs eager per-leaf decrypt.
+
+    The ``derived`` column is plaintext-bytes-materialized per step — the
+    number the SealedTensor dataflow is built to shrink: fused keeps the
+    matmul-shaped leaves as ciphertext all the way into the kernel, so only
+    the small-leaf fraction ever exists as plaintext in memory.
+    """
+    from repro.config import SealConfig
+    from repro.configs import get_reduced
+    from repro.core import sealed_store as SS
+    from repro.models import transformer as T
+    key = bytes(range(32))
+    rows = []
+    cfg = get_reduced("internlm2_1_8b")
+    params = T.init_params(cfg, jax.random.key(0))
+    _, cache = jax.jit(lambda p, b: T.prefill(cfg, p, b, 64))(
+        params, {"tokens": jnp.zeros((4, 16), jnp.int32)})
+    db = {"tokens": jnp.zeros((4, 1), jnp.int32)}
+    for name, seal in [
+            ("fused", SealConfig(mode="coloe", smart_ratio=0.5)),
+            ("eager", SealConfig(mode="coloe", smart_ratio=0.5,
+                                 fuse_decrypt=False))]:
+        sp = SS.seal_params(params, seal, key)
+
+        def dstep(tensors, c, b, pos, sp=sp):
+            p = SS.fused_params(
+                SS.SealedParams(tensors, sp.plans, sp.treedef, sp.seal), key)
+            return T.decode_step(cfg, p, c, b, pos)
+
+        us, _ = _timeit(jax.jit(dstep), sp.tensors, cache, db, jnp.int32(16),
+                        n=3, warmup=1)
+        rows.append((f"step_decode_sealed_{name}", round(us, 1),
+                     sp.plaintext_bytes_materialized()))
+    return rows
+
+
 def security_fig8_fig9(quick: bool = True):
     """Figs 8 & 9 (scaled): substitute accuracy + transferability."""
     from repro.core.security.evaluate import evaluate

@@ -19,6 +19,7 @@ def main() -> None:
         F.table2_engine_bandwidth,
         F.kernel_bench,
         F.step_bench,
+        F.sealed_step_bench,
     ]
     if os.environ.get("RUN_SECURITY", "quick") != "skip":
         suites.append(lambda: F.security_fig8_fig9(

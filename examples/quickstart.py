@@ -53,12 +53,20 @@ def main():
     loss_plain, _ = T.forward(cfg, params, batch)
 
     @jax.jit
-    def sealed_forward(buffers):
-        sp2 = SealedParams(buffers, sp.metas, sp.plans, sp.treedef, sp.seal)
+    def sealed_forward(tensors):
+        sp2 = SealedParams(tensors, sp.plans, sp.treedef, sp.seal)
         p = unseal_params(sp2, KEY)
         return T.forward(cfg, p, batch)[0]
 
-    loss_sealed = sealed_forward(sp.buffers)
+    loss_sealed = sealed_forward(sp.tensors)
+    # (this demo decrypts EVERY leaf; the serving path uses
+    # sealed_store.fused_params instead, which keeps the matmul-shaped
+    # leaves ciphertext all the way into the fused kernel)
+    print(f"serving view (fused_params): {len(sp.fused_paths())} matmul "
+          f"leaves stay sealed -> only "
+          f"{sp.plaintext_bytes_materialized()/1e6:.2f} MB of "
+          f"{P.plan_totals(plans)['total_bytes']/1e6:.2f} MB is ever "
+          f"plaintext per step (see examples/sealed_serving.py)")
     print(f"plaintext loss={float(loss_plain):.6f} "
           f"sealed loss={float(loss_sealed):.6f} "
           f"equal={bool(jnp.allclose(loss_plain, loss_sealed))}")

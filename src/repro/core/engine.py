@@ -105,7 +105,30 @@ class SealedBuffer:
         return 2 if self.scheme == "counter" else 1
 
 
-class DirectEngine:
+class EngineProtocol:
+    """What every memory-encryption engine emits.
+
+    * ``encrypt`` / ``decrypt`` — the line-packed at-rest layout (128 B
+      lines, counters separate or colocated per scheme).
+    * ``encrypt_tiles`` / ``decrypt_tiles`` — the tile-sealed matmul layout
+      (counter-mode engines only): a (K, N) weight whose keystream derives
+      from the tile address (``kernels.ref.tile_counters``), so any
+      (bk, bn) tile decrypts independently inside the fused Pallas kernel.
+      ``supports_fused`` gates it — AES-ECB has no counter structure to
+      exploit, so Direct stays on the eager line layout.
+    """
+    supports_fused = False
+
+    def encrypt_tiles(self, w2d, nonce3, row_mask, write_counter: int,
+                      bk: int, bn: int):
+        raise NotImplementedError(f"{self.name}: no tile-sealed layout")
+
+    def decrypt_tiles(self, ct2d, nonce3, row_mask, write_counter: int,
+                      bk: int, bn: int):
+        raise NotImplementedError(f"{self.name}: no tile-sealed layout")
+
+
+class DirectEngine(EngineProtocol):
     """AES-128-ECB — paper's 'Direct' baseline."""
     name = "direct"
 
@@ -138,13 +161,33 @@ class DirectEngine:
         return words_to_tensor(words.reshape(-1)[:s.orig_len], s.shape, s.dtype)
 
 
-class _CtrBase:
+class _CtrBase(EngineProtocol):
+    supports_fused = True
+
     def __init__(self, key_bytes: bytes):
         self.key_words = jnp.asarray(C.key_to_words(key_bytes[:32]))
 
     def _otp(self, n_lines, write_counters, nonce2):
         addrs = jnp.arange(n_lines, dtype=jnp.uint32)
         return _line_otp(self.key_words, addrs, write_counters, nonce2)
+
+    # ---- tile-sealed matmul layout (shared by counter & coloe: the only
+    # counter state is the per-tensor write counter, which is colocated by
+    # construction — the per-tile counters are implicit in the address) ----
+
+    def encrypt_tiles(self, w2d, nonce3, row_mask, write_counter: int,
+                      bk: int, bn: int):
+        """(K, N) float32 -> (K, N) u32 ciphertext; rows where ``row_mask``
+        is False stay plaintext (SE bypass, paper §3.3)."""
+        from repro.kernels import ref as _ref   # oracle owns the derivation
+        return _ref.seal_weights_ref(w2d, self.key_words, jnp.asarray(
+            nonce3, jnp.uint32), bk, bn, row_mask, write_counter)
+
+    def decrypt_tiles(self, ct2d, nonce3, row_mask, write_counter: int,
+                      bk: int, bn: int):
+        from repro.kernels import ref as _ref
+        return _ref.unseal_weights_ref(ct2d, self.key_words, jnp.asarray(
+            nonce3, jnp.uint32), bk, bn, row_mask, write_counter)
 
 
 class CounterEngine(_CtrBase):

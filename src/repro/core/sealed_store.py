@@ -2,15 +2,27 @@
 image an adversary could probe — DESIGN.md §2) and decrypt on use.
 
 ``seal_params`` applies the SE plan (which rows are ciphertext) + the chosen
-engine (direct / counter / coloe) per leaf. ``unseal_params`` is jittable so
-serving graphs can decrypt in-graph; the perf-critical fused path lives in
-``repro.kernels`` (decrypt inside the matmul).
+engine (direct / counter / coloe) per leaf, producing one ``SealedTensor``
+per leaf:
+
+* matmul-shaped leaves (attention wq/wk/wv/wo, dense-MLP wi/wg/wo, the LM
+  head) get the **tile-sealed layout** when ``seal.fuse_decrypt`` is on and
+  the engine is counter-mode: they flow *still sealed* through the jitted
+  serving graph into ``kernels.sealed_matmul`` and are decrypted in-register
+  under their SE row masks — the plaintext weight never exists in HBM;
+* everything else (norms, embeddings, MoE experts, recurrent/SSM weights)
+  gets the **line-packed at-rest layout** and is decrypted eagerly in-graph.
+
+``unseal_params`` decrypts every leaf (both layouts, jittable);
+``fused_params`` decrypts only the line-layout leaves and passes tile-sealed
+leaves through as ``SealedTensor`` — that is the serving hot path, and
+``plaintext_bytes_materialized`` is exactly the per-step metric it buys.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,28 +32,47 @@ from repro.config import SealConfig
 from repro.core import coloe as CL
 from repro.core import engine as E
 from repro.core import plan as P
+from repro.core.sealed_tensor import SealedTensor, SealMeta
 
 
 @dataclasses.dataclass
 class SealedParams:
-    """buffers: jit-traversable pytree; metas/plans: static host metadata."""
-    buffers: Dict[str, dict]
-    metas: Dict[str, E.SealedBuffer]     # payload/counters fields unused here
+    """tensors: path -> SealedTensor (jit-traversable pytree); plans and
+    treedef are static host metadata."""
+    tensors: Dict[str, SealedTensor]
     plans: Dict[str, P.LeafPlan]
     treedef: object
     seal: SealConfig
 
     def stored_bytes(self) -> int:
-        return sum(m.stored_bytes() for m in self.metas.values())
+        return sum(t.stored_bytes() for t in self.tensors.values())
 
     def enc_fraction(self) -> float:
-        t = P.plan_totals(self.plans)
-        return t["enc_fraction"]
+        return P.plan_totals(self.plans)["enc_fraction"]
+
+    def fused_paths(self):
+        return [p for p, t in self.tensors.items()
+                if t.meta.layout == "tiles"]
+
+    def plaintext_bytes_materialized(self) -> int:
+        """Plaintext bytes the decrypt-on-use graph materializes per step:
+        only the eagerly-decrypted (line-layout) leaf fraction; tile-sealed
+        leaves are decrypted in-register inside the matmul."""
+        return sum(t.logical_bytes() for t in self.tensors.values()
+                   if t.meta.layout != "tiles")
 
 
 def _nonce2(path: str) -> Tuple[int, int]:
     h = hashlib.sha256(path.encode()).digest()
     return (int.from_bytes(h[:4], "little"), int.from_bytes(h[4:8], "little"))
+
+
+def _nonce3(path: str) -> Tuple[int, int, int]:
+    """3-word per-tensor nonce for the tile layout (distinct domain from the
+    line layout, whose nonce word 0 is the small line address)."""
+    h = hashlib.sha256(b"tiles/" + path.encode()).digest()
+    return tuple(int.from_bytes(h[i:i + 4], "little") | 1
+                 for i in (8, 12, 16))
 
 
 def line_flags_from_mask(mask_elems, dtype, n_lines: int) -> jnp.ndarray:
@@ -56,40 +87,171 @@ def line_flags_from_mask(mask_elems, dtype, n_lines: int) -> jnp.ndarray:
     return jnp.any(per_line, axis=1).astype(jnp.uint32)
 
 
+# --------------------------------------------------------------------------
+# fused (tile-sealed) eligibility
+# --------------------------------------------------------------------------
+
+# (parent, name) pairs whose consumption sites are threaded through
+# SealedTensor.matmul in models/. MoE experts (4-D, expert-batched), the
+# router, recurrent/SSM projections and the embedding stay on the eager path
+# for now (ROADMAP open item).
+_FUSED_LEAVES = {("attn", "wq"), ("attn", "wk"), ("attn", "wv"),
+                 ("attn", "wo"), ("mlp", "wi"), ("mlp", "wg"),
+                 ("mlp", "wo"), ("head", "w")}
+
+
+def _pick_block(dim: int) -> Optional[int]:
+    for b in (128, 64, 32, 16, 8):
+        if dim % b == 0:
+            return b
+    return None
+
+
+def tile_geometry(path: Tuple[str, ...], shape, dtype, seal: SealConfig):
+    """(n_batch, k_ndim, n_out, K, N, bk, bn) if the leaf can take the
+    tile-sealed matmul layout, else None. Pure function of shapes, so the
+    dry-run can build spec-level sealed trees without allocating."""
+    if not seal.fuse_decrypt or seal.mode not in ("counter", "coloe"):
+        return None
+    parent = path[-2] if len(path) >= 2 else ""
+    if (parent, path[-1]) not in _FUSED_LEAVES and \
+            (path[0], path[-1]) not in _FUSED_LEAVES:
+        return None
+    if jnp.dtype(dtype).itemsize != 4:
+        return None                       # payload is the u32 bitcast
+    cls = P._classify(path, len(shape))
+    if cls is None:
+        return None
+    batch_axes, row_axes = cls
+    nb, nk = len(batch_axes), len(row_axes)
+    if nb > 1 or batch_axes != tuple(range(nb)) or \
+            row_axes != tuple(range(nb, nb + nk)):
+        return None
+    n_out = len(shape) - nb - nk
+    if n_out < 1:
+        return None
+    k = int(np.prod(shape[nb:nb + nk]))
+    n = int(np.prod(shape[nb + nk:]))
+    bk, bn = _pick_block(k), _pick_block(n)
+    if bk is None or bn is None:
+        return None
+    return nb, nk, n_out, k, n, bk, bn
+
+
+# --------------------------------------------------------------------------
+# seal
+# --------------------------------------------------------------------------
+
+def _seal_lines(eng, seal, leaf, plan, path) -> SealedTensor:
+    n_words = -(-leaf.size * leaf.dtype.itemsize // 4)
+    n_lines = -(-n_words // CL.WORDS_PER_LINE)
+    if plan.mode == "rows":
+        mask = P.expand_mask(plan, leaf.shape)
+        flags = line_flags_from_mask(mask, leaf.dtype, n_lines)
+    else:
+        flags = jnp.ones((n_lines,), jnp.uint32)
+    sealed = eng.encrypt(leaf, nonce2=_nonce2(path), enc_flags=flags) \
+        if seal.mode != "direct" else eng.encrypt(leaf, enc_flags=flags)
+    meta = SealMeta(scheme=sealed.scheme, layout="lines",
+                    dtype=str(jnp.dtype(leaf.dtype)),
+                    nonce=tuple(int(v) for v in sealed.nonce2),
+                    shape=tuple(leaf.shape), orig_len=sealed.orig_len)
+    return SealedTensor(sealed.payload, sealed.counters, None, None, None,
+                        meta)
+
+
+def _seal_tiles(eng, leaf, plan, path, geom) -> SealedTensor:
+    nb, nk, n_out, k, n, bk, bn = geom
+    nonce3 = _nonce3(path)
+    shape = leaf.shape
+    if plan.mask is not None:
+        mask = plan.mask.reshape(plan.mask.shape[:nb] + (k,))
+    else:
+        mask = jnp.ones(shape[:nb] + (k,), bool)
+    key_arr = jnp.asarray(eng.key_words, jnp.uint32)
+    if nb == 1:
+        # one write-counter per stack slice: the (key, nonce, counter)
+        # triple — hence the OTP — is never reused across layers
+        slices = [eng.encrypt_tiles(leaf[i].reshape(k, n), nonce3, mask[i],
+                                    i, bk, bn) for i in range(shape[0])]
+        payload = jnp.stack(slices).reshape(shape)
+        wc = jnp.arange(shape[0], dtype=jnp.uint32)
+        key_c = jnp.broadcast_to(key_arr, (shape[0], 8))
+    else:
+        payload = eng.encrypt_tiles(leaf.reshape(k, n), nonce3, mask,
+                                    0, bk, bn).reshape(shape)
+        wc = jnp.zeros((), jnp.uint32)
+        key_c = key_arr
+    meta = SealMeta(scheme=eng.name, layout="tiles",
+                    dtype=str(jnp.dtype(leaf.dtype)), nonce=nonce3,
+                    shape=tuple(shape), n_batch=nb, k_ndim=nk, n_out=n_out,
+                    bk=bk, bn=bn)
+    return SealedTensor(payload, None, mask, key_c, wc, meta)
+
+
 def seal_params(params, seal: SealConfig, key_bytes: bytes) -> SealedParams:
     plans = P.make_plan(params, seal)
     eng = E.make_engine(seal.mode, key_bytes)
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    buffers, metas = {}, {}
+    tensors: Dict[str, SealedTensor] = {}
     for keypath, leaf in flat:
-        path = "/".join(P._path_tuple(keypath))
+        pt = P._path_tuple(keypath)
+        path = "/".join(pt)
         plan = plans[path]
-        n_words = -(-leaf.size * leaf.dtype.itemsize // 4)
-        n_lines = -(-n_words // CL.WORDS_PER_LINE)
-        if plan.mode == "rows":
-            mask = P.expand_mask(plan, leaf.shape)
-            flags = line_flags_from_mask(mask, leaf.dtype, n_lines)
+        geom = tile_geometry(pt, leaf.shape, leaf.dtype, seal) \
+            if eng.supports_fused else None
+        if geom is not None:
+            tensors[path] = _seal_tiles(eng, leaf, plan, path, geom)
         else:
-            flags = jnp.ones((n_lines,), jnp.uint32)
-        sealed = eng.encrypt(leaf, nonce2=_nonce2(path), enc_flags=flags) \
-            if seal.mode != "direct" else eng.encrypt(leaf, enc_flags=flags)
-        buffers[path] = {"payload": sealed.payload}
-        if sealed.counters is not None:
-            buffers[path]["counters"] = sealed.counters
-        metas[path] = dataclasses.replace(sealed, payload=None, counters=None)
-    return SealedParams(buffers, metas, plans, treedef, seal)
+            tensors[path] = _seal_lines(eng, seal, leaf, plan, path)
+    return SealedParams(tensors, plans, treedef, seal)
+
+
+# --------------------------------------------------------------------------
+# unseal
+# --------------------------------------------------------------------------
+
+def _unseal_tensor(eng, st: SealedTensor):
+    m = st.meta
+    if m.layout == "tiles":
+        nb = m.n_batch
+        k = int(np.prod(m.shape[nb:nb + m.k_ndim]))
+        n = int(np.prod(m.shape[nb + m.k_ndim:]))
+        if nb == 1:
+            outs = [eng.decrypt_tiles(st.payload[i].reshape(k, n), m.nonce,
+                                      st.row_mask[i], i, m.bk, m.bn)
+                    for i in range(m.shape[0])]
+            w = jnp.stack(outs).reshape(m.shape)
+        else:
+            w = eng.decrypt_tiles(st.payload.reshape(k, n), m.nonce,
+                                  st.row_mask, 0, m.bk, m.bn).reshape(m.shape)
+        return w.astype(jnp.dtype(m.dtype))
+    buf = E.SealedBuffer(m.scheme, st.payload, st.counters, m.orig_len,
+                         m.shape, jnp.dtype(m.dtype), m.nonce)
+    return eng.decrypt(buf)
 
 
 def unseal_params(sp: SealedParams, key_bytes: bytes):
-    """Decrypt every leaf; jittable (buffers are traced, metadata static)."""
+    """Decrypt every leaf; jittable (children traced, metadata static).
+
+    Leaf order comes from ``sp.plans`` (host-side, insertion order ==
+    treedef flatten order) with keyed lookups into ``tensors`` — the
+    tensors dict itself crosses jit boundaries, where JAX re-sorts dict
+    keys lexicographically, which need not match the flatten order.
+    """
     eng = E.make_engine(sp.seal.mode, key_bytes)
-    flat = []
-    for path in sp.metas:
-        m = sp.metas[path]
-        buf = sp.buffers[path]
-        s = dataclasses.replace(m, payload=buf["payload"],
-                                counters=buf.get("counters"))
-        flat.append(eng.decrypt(s))
+    flat = [_unseal_tensor(eng, sp.tensors[p]) for p in sp.plans]
+    return jax.tree_util.tree_unflatten(sp.treedef, flat)
+
+
+def fused_params(sp: SealedParams, key_bytes: bytes):
+    """The serving view: line-layout leaves decrypt eagerly; tile-sealed
+    leaves pass through STILL SEALED and are decrypted in-register by
+    ``kernels.sealed_matmul`` at their consumption site. (Ordering: see
+    ``unseal_params``.)"""
+    eng = E.make_engine(sp.seal.mode, key_bytes)
+    flat = [sp.tensors[p] if sp.tensors[p].meta.layout == "tiles"
+            else _unseal_tensor(eng, sp.tensors[p]) for p in sp.plans]
     return jax.tree_util.tree_unflatten(sp.treedef, flat)
 
 
@@ -100,4 +262,6 @@ def sealed_byte_report(sp: SealedParams) -> Dict[str, float]:
         "enc_fraction": tot["enc_fraction"],
         "stored_bytes": sp.stored_bytes(),
         "overhead": sp.stored_bytes() / max(tot["total_bytes"], 1) - 1.0,
+        "fused_leaves": len(sp.fused_paths()),
+        "plaintext_bytes_per_step": sp.plaintext_bytes_materialized(),
     }

@@ -40,21 +40,24 @@ def seal_weights(w, key_words, nonce_words, *, bk: int = 128, bn: int = 128,
 
 
 def sealed_matmul(x, w_ct, row_mask, key_words, nonce_words,
-                  write_counter: int = 0, *, bm: int = 128, bk: int = 128,
-                  bn: int = 128, interpret=None):
+                  write_counter=0, *, bm: int = 128, bk: int = 128,
+                  bn: int = 128, interpret=None,
+                  compute_dtype: str = "float32"):
     """Fused decrypt+matmul (beyond-paper optimization; zero extra HBM).
 
     K/N must be multiples of (bk, bn) — that's the sealed storage contract;
-    the activation dim M is padded here as needed."""
+    the activation dim M is padded here as needed. ``write_counter`` may be
+    a traced scalar (the serving path threads it through SealedTensor)."""
     interpret = _default_interpret() if interpret is None else interpret
-    wc = jnp.asarray([write_counter], jnp.uint32)
+    wc = jnp.asarray(write_counter, jnp.uint32).reshape(-1)[:1]
     m = x.shape[0]
     bm = min(bm, m) if m % bm else bm
     pad = (-m) % bm
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
     out = _sm.sealed_matmul(x, w_ct, row_mask, key_words, nonce_words, wc,
-                            bm=bm, bk=bk, bn=bn, interpret=interpret)
+                            bm=bm, bk=bk, bn=bn, interpret=interpret,
+                            compute_dtype=compute_dtype)
     return out[:m]
 
 

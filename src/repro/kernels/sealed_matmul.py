@@ -34,8 +34,9 @@ import numpy as np
 from repro.kernels.chacha20 import _chacha_rounds, _CONST
 
 
-def _make_kernel(bm, bk, bn, nn_tiles, uniq):
+def _make_kernel(bm, bk, bn, nn_tiles, uniq, compute_dtype):
     nblk = (bk * bn) // 16
+    cdt = jnp.dtype(compute_dtype)
 
     def kernel(key_ref, nonce_ref, wc_ref, x_ref, w_ref, mask_ref, out_ref):
         j_idx = pl.program_id(1)
@@ -55,8 +56,12 @@ def _make_kernel(bm, bk, bn, nn_tiles, uniq):
         wu = w_ref[...]
         mask = mask_ref[...].astype(bool)
         wpt = jnp.where(mask[:, None], wu ^ pad, wu)
-        wf = jax.lax.bitcast_convert_type(wpt, jnp.float32)
-        acc = jnp.dot(x_ref[...], wf, preferred_element_type=jnp.float32)
+        # match the unfused model path's precision: weights/activations are
+        # rounded to the model compute dtype before the MXU contraction,
+        # which always accumulates in f32
+        wf = jax.lax.bitcast_convert_type(wpt, jnp.float32).astype(cdt)
+        acc = jnp.dot(x_ref[...].astype(cdt), wf,
+                      preferred_element_type=jnp.float32)
 
         @pl.when(k_idx == 0)
         def _init():
@@ -69,20 +74,22 @@ def _make_kernel(bm, bk, bn, nn_tiles, uniq):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret",
+                                             "compute_dtype"))
 def sealed_matmul(x, w_ct, row_mask, key_words, nonce_words, write_counter,
                   *, bm: int = 128, bk: int = 128, bn: int = 128,
-                  interpret: bool = True):
+                  interpret: bool = True, compute_dtype: str = "float32"):
     """x: (M, K) f32; w_ct: (K, N) u32 (tile-sealed, see kernels.ref);
     row_mask: (K,) bool/u8 (True = row is ciphertext);
-    write_counter: (1,) u32. Returns (M, N) f32."""
+    write_counter: (1,) u32. Returns (M, N) f32, accumulated in f32 with
+    operands rounded to ``compute_dtype`` (the model compute precision)."""
     m, k = x.shape
     k2, n = w_ct.shape
     assert k == k2 and m % bm == 0 and k % bk == 0 and n % bn == 0, \
         (x.shape, w_ct.shape, bm, bk, bn)
     nn_tiles = n // bn
     uniq = (k * n) // 16
-    kernel = _make_kernel(bm, bk, bn, nn_tiles, uniq)
+    kernel = _make_kernel(bm, bk, bn, nn_tiles, uniq, compute_dtype)
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         kernel,

@@ -177,8 +177,15 @@ def parse_module(hlo_text: str) -> Tuple[Dict[str, CompStats], Optional[str]]:
             cm = _LHS_CDIMS.search(raw)
             contract = 1
             if cm:
-                lhs = dm.group(2).split(",")[0].strip().lstrip("%")
-                lshape = shapes.get(lhs, ("f32", ()))[1]
+                # operand text is "f32[8,64]{1,0} %name, ..." — splitting on
+                # "," would cut inside the shape brackets, so pull the first
+                # %name reference instead, falling back to shape-in-place
+                # parsing for dumps that drop the % sigil.
+                lhs_m = _OPERAND_RE.search(dm.group(2))
+                if lhs_m is not None:
+                    lshape = shapes.get(lhs_m.group(1), ("f32", ()))[1]
+                else:
+                    lshape = _parse_shape(dm.group(2))[1]
                 for idx in cm.group(1).split(","):
                     if idx and int(idx) < len(lshape):
                         contract *= lshape[int(idx)]

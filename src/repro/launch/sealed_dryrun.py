@@ -12,6 +12,13 @@ step. Variants map to the paper's schemes:
                generated for exactly r of the bytes (beyond-paper: the
                paper's memory controller sees interleaved lines; we
                re-layout at rest). Plaintext rows skip the engine entirely.
+  coloe_fused — ColoE + SE where matmul-shaped leaves take the tile-sealed
+               ``SealedTensor`` layout and flow STILL SEALED into the fused
+               decrypt-in-matmul Pallas kernel; only the small leaf
+               fraction decrypts eagerly. ``plaintext_bytes_materialized``
+               in the output records is the per-step plaintext traffic each
+               variant pays — for coloe_fused it drops to the non-matmul
+               fraction.
 
 Masks are synthesized structurally (first ceil(r*rows) rows of each SE
 leaf), so the whole pipeline works from ShapeDtypeStructs — no 2.5B-param
@@ -31,10 +38,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import SHAPES, SealConfig
-from repro.configs import get_config
+from repro.configs import get_config, get_reduced
 from repro.core import cipher as C
 from repro.core import coloe as CL
 from repro.core import plan as PL
+from repro.core import sealed_store as SS
+from repro.core.sealed_tensor import SealMeta, SealedTensor
 from repro.launch import hlo_stats
 from repro.launch.inputs import input_specs
 from repro.launch.mesh import make_production_mesh
@@ -66,9 +75,13 @@ def synthetic_masks(pspec, seal: SealConfig):
 
 
 def sealed_decode_variant(arch: str, shape_name: str, variant: str,
-                          ratio: float = 0.5, multi_pod: bool = False):
+                          ratio: float = 0.5, multi_pod: bool = False,
+                          reduced: bool = False):
     """Lower+compile one sealed-decode variant; return parser stats."""
-    cfg = get_config(arch)
+    known = ("baseline", "counter", "coloe", "coloe_se", "coloe_fused")
+    if variant not in known:
+        raise ValueError(f"unknown variant {variant!r}; known: {known}")
+    cfg = get_reduced(arch) if reduced else get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     pspec = T.param_spec(cfg)
@@ -86,16 +99,47 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
     flat, treedef = jax.tree_util.tree_flatten_with_path(pspec)
     seal = SealConfig(mode="coloe", smart_ratio=ratio)
     ratios = synthetic_masks(pspec, seal)
+    p_ps_flat = {"/".join(PL._path_tuple(kp)): ps for kp, ps in
+                 jax.tree_util.tree_flatten_with_path(p_ps)[0]}
 
     # --- build ciphertext buffer SPECS + the in-graph decrypt ---
-    buf_specs, buf_shard, meta = {}, {}, {}
+    buf_specs, buf_shard, meta, tile_metas = {}, {}, {}, {}
     for kp, leaf in flat:
-        path = "/".join(PL._path_tuple(kp))
+        pt_path = PL._path_tuple(kp)
+        path = "/".join(pt_path)
         lines = _leaf_lines(leaf)
         r = ratios[path]
+        geom = (SS.tile_geometry(pt_path, leaf.shape, leaf.dtype, seal)
+                if variant == "coloe_fused" else None)
+        if geom is not None:
+            # tile-sealed SealedTensor leaf: ciphertext payload in the
+            # weight's own shape (sharded exactly like the plaintext param
+            # would be), SE row mask, per-slice write counters, key words.
+            nb, nk, n_out, k, n, bk, bn = geom
+            lead = leaf.shape[:nb]
+            d = {"ct": jax.ShapeDtypeStruct(leaf.shape, jnp.uint32),
+                 "mask": jax.ShapeDtypeStruct(lead + (k,), jnp.bool_),
+                 "wc": jax.ShapeDtypeStruct(lead, jnp.uint32),
+                 "key": jax.ShapeDtypeStruct(lead + (8,), jnp.uint32)}
+            buf_specs[path] = d
+            buf_shard[path] = {
+                "ct": NamedSharding(mesh, p_ps_flat[path]),
+                "mask": NamedSharding(mesh, P(*([None] * (nb + 1)))),
+                "wc": NamedSharding(mesh, P(*([None] * nb))),
+                "key": NamedSharding(mesh, P(*([None] * (nb + 1))))}
+            tile_metas[path] = SealMeta(
+                scheme="coloe", layout="tiles",
+                dtype=str(jnp.dtype(leaf.dtype)),
+                nonce=SS._nonce3(path), shape=tuple(leaf.shape),
+                n_batch=nb, k_ndim=nk, n_out=n_out, bk=bk, bn=bn)
+            # tile layout: no per-line counter area, SE mask rides as 1B/row
+            stored_leaf = leaf.size * 4 + int(np.prod(lead + (k,)))
+            meta[path] = (leaf.shape, leaf.dtype, lines, lines,
+                          stored_leaf, 0)
+            continue
         if variant == "baseline":
             enc_lines, plain_lines, streams = 0, lines, 1
-        elif variant in ("counter", "coloe"):
+        elif variant in ("counter", "coloe", "coloe_fused"):
             enc_lines, plain_lines = lines, 0
             streams = 2 if variant == "counter" else 1
         else:                            # coloe_se: layout-split
@@ -103,7 +147,8 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
             plain_lines = lines - enc_lines
             streams = 1
         words_per = (CL.COLOE_LINE_WORDS
-                     if variant in ("coloe", "coloe_se") else CL.WORDS_PER_LINE)
+                     if variant in ("coloe", "coloe_se", "coloe_fused")
+                     else CL.WORDS_PER_LINE)
         d = {}
         if enc_lines:
             d["ct"] = jax.ShapeDtypeStruct((enc_lines, words_per), jnp.uint32)
@@ -121,7 +166,12 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
             k: NamedSharding(mesh, P("data" if v.shape[0] % dsz == 0 else None,
                                      *([None] * (v.ndim - 1))))
             for k, v in d.items()}
-        meta[path] = (leaf.shape, leaf.dtype, lines, enc_lines)
+        stored_leaf = (enc_lines * words_per + plain_lines * CL.WORDS_PER_LINE
+                       + (enc_lines * 2 if variant == "counter" else 0)) * 4
+        pt_leaf = (0 if variant == "baseline"
+                   else leaf.size * jnp.dtype(leaf.dtype).itemsize)
+        meta[path] = (leaf.shape, leaf.dtype, lines, enc_lines,
+                      stored_leaf, pt_leaf)
 
     key_words = jnp.asarray(KEYW)
 
@@ -129,12 +179,18 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
         leaves = []
         for kp, leaf in flat:
             path = "/".join(PL._path_tuple(kp))
-            shape_, dtype_, lines, enc_lines = meta[path]
+            if path in tile_metas:
+                b = buffers[path]
+                leaves.append(SealedTensor(b["ct"], None, b["mask"],
+                                           b["key"], b["wc"],
+                                           tile_metas[path]))
+                continue
+            shape_, dtype_, lines, enc_lines = meta[path][:4]
             parts = []
             b = buffers[path]
             if enc_lines:
                 ct = b["ct"]
-                if variant in ("coloe", "coloe_se"):
+                if variant in ("coloe", "coloe_se", "coloe_fused"):
                     data, wc, _ = CL.coloe_unpack(ct)
                 else:
                     data, wc = ct, b["ctr"]
@@ -160,7 +216,7 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
     def words_to_plain(buffers, kp):
         from repro.core.engine import words_to_tensor
         path = "/".join(PL._path_tuple(kp))
-        shape_, dtype_, lines, _ = meta[path]
+        shape_, dtype_, lines, _ = meta[path][:4]
         n_words = -(-int(np.prod(shape_)) * jnp.dtype(dtype_).itemsize // 4)
         return words_to_tensor(buffers[path]["pt"].reshape(-1)[:n_words],
                                shape_, dtype_)
@@ -176,11 +232,7 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
     txt = compiled.as_text()
     stats = hlo_stats.module_totals(txt)
     ma = compiled.memory_analysis()
-    stored = sum(
-        (m[3] * (CL.COLOE_LINE_WORDS if variant in ("coloe", "coloe_se")
-                 else CL.WORDS_PER_LINE) + (m[2] - m[3]) * CL.WORDS_PER_LINE
-         + (m[3] * 2 if variant == "counter" else 0)) * 4
-        for m in meta.values())
+    stored = sum(m[4] for m in meta.values())
     return {
         "arch": arch, "shape": shape_name, "variant": variant, "ratio": ratio,
         "compile_s": round(time.time() - t0, 1),
@@ -188,6 +240,9 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
         "bytes_per_device": stats["bytes"],
         "collective_bytes_per_device": sum(stats["collectives"].values()),
         "stored_param_bytes_global": stored,
+        "plaintext_bytes_materialized_per_step": sum(m[5] for m in
+                                                     meta.values()),
+        "fused_matmul_leaves": len(tile_metas),
         "temp_gib": ma.temp_size_in_bytes / 2**30,
         "arg_gib": ma.argument_size_in_bytes / 2**30,
     }
@@ -199,13 +254,16 @@ def main():
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--variant", default="all")
     ap.add_argument("--ratio", type=float, default=0.5)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced config (CI smoke)")
     ap.add_argument("--out", default="results/sealed_decode.json")
     args = ap.parse_args()
-    variants = (["baseline", "counter", "coloe", "coloe_se"]
+    variants = (["baseline", "counter", "coloe", "coloe_se", "coloe_fused"]
                 if args.variant == "all" else [args.variant])
     out = []
     for v in variants:
-        rec = sealed_decode_variant(args.arch, args.shape, v, args.ratio)
+        rec = sealed_decode_variant(args.arch, args.shape, v, args.ratio,
+                                    reduced=args.reduced)
         print(json.dumps(rec))
         out.append(rec)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.config import ModelConfig
+from repro.core.sealed_tensor import SealedTensor
 from repro.sharding.api import constrain, logical_spec
 
 # --------------------------------------------------------------------------
@@ -26,6 +27,28 @@ from repro.sharding.api import constrain, logical_spec
 
 def cdtype(cfg: ModelConfig):
     return jnp.dtype(cfg.dtype)
+
+
+def dense(x, w, eq: str, dt):
+    """Weight contraction that accepts either a plain array (einsum) or a
+    still-sealed ``SealedTensor`` (fused decrypt-in-matmul Pallas kernel).
+
+    The sealed branch flattens x's trailing contraction axes to (M, K),
+    runs ``x2d @ decrypt(w)`` with the decrypt fused into the matmul (the
+    plaintext weight never materializes in HBM), and restores the einsum's
+    output shape. Operands are rounded to ``dt`` inside the kernel so both
+    branches share the model compute precision.
+    """
+    if not isinstance(w, SealedTensor):
+        return jnp.einsum(eq, x, w.astype(dt))
+    kd = w.meta.k_ndim
+    lead = x.shape[:x.ndim - kd]
+    k = 1
+    for d_ in x.shape[x.ndim - kd:]:
+        k *= d_
+    y = w.matmul(x.reshape(-1, k).astype(jnp.float32),
+                 compute_dtype=str(jnp.dtype(dt)))
+    return y.reshape(lead + w.out_shape).astype(dt)
 
 
 def act_fn(name: str):
@@ -37,6 +60,25 @@ def softcap(x, cap: float):
     if not cap:
         return x
     return cap * jnp.tanh(x / cap)
+
+
+@jax.custom_vjp
+def pin(x):
+    """``optimization_barrier`` with a gradient rule (the primitive has no
+    differentiation rule, which broke MoE training). The cotangent is
+    barriered too so the bwd pass keeps the same dtype pinning."""
+    return lax.optimization_barrier(x)
+
+
+def _pin_fwd(x):
+    return lax.optimization_barrier(x), None
+
+
+def _pin_bwd(_, g):
+    return (lax.optimization_barrier(g),)
+
+
+pin.defvjp(_pin_fwd, _pin_bwd)
 
 
 # --------------------------------------------------------------------------
@@ -272,12 +314,12 @@ def attention_apply(cfg: ModelConfig, p, x, positions, *, window: int,
     """
     dt = cdtype(cfg)
     xb = x.astype(dt)
-    q = jnp.einsum("bsd,dhk->bshk", xb, p["wq"].astype(dt))
+    q = dense(xb, p["wq"], "bsd,dhk->bshk", dt)
     q = constrain(q, "batch", None, "heads", "head_dim")
     scale = cfg.head_dim ** -0.5
     if kv_override is None:
-        k = jnp.einsum("bsd,dhk->bshk", xb, p["wk"].astype(dt))
-        v = jnp.einsum("bsd,dhk->bshk", xb, p["wv"].astype(dt))
+        k = dense(xb, p["wk"], "bsd,dhk->bshk", dt)
+        v = dense(xb, p["wv"], "bsd,dhk->bshk", dt)
         k = constrain(k, "batch", None, "kv_heads", "kv_head_dim")
         v = constrain(v, "batch", None, "kv_heads", "kv_head_dim")
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -301,7 +343,7 @@ def attention_apply(cfg: ModelConfig, p, x, positions, *, window: int,
         out = _sdpa(q, k, v, mask, cfg.attn_softcap, scale,
                     constrain_heads=False)
         kv = (k, v)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    y = dense(out, p["wo"], "bshk,hkd->bsd", dt)
     y = constrain(y, "batch", None, None)
     return y, kv
 
@@ -310,8 +352,8 @@ def project_kv(cfg: ModelConfig, p, x, positions):
     """Just the k,v projections (+rope on k) — used when writing decode caches."""
     dt = cdtype(cfg)
     xb = x.astype(dt)
-    k = jnp.einsum("bsd,dhk->bshk", xb, p["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", xb, p["wv"].astype(dt))
+    k = dense(xb, p["wk"], "bsd,dhk->bshk", dt)
+    v = dense(xb, p["wv"], "bsd,dhk->bshk", dt)
     k = apply_rope(k, positions, cfg.rope_theta)
     return k, v
 
@@ -344,10 +386,10 @@ def mlp_apply(cfg: ModelConfig, p, x):
     dt = cdtype(cfg)
     xb = x.astype(dt)
     a = act_fn(cfg.act)
-    h = a(jnp.einsum("bsd,df->bsf", xb, p["wg"].astype(dt))) * \
-        jnp.einsum("bsd,df->bsf", xb, p["wi"].astype(dt))
+    h = a(dense(xb, p["wg"], "bsd,df->bsf", dt)) * \
+        dense(xb, p["wi"], "bsd,df->bsf", dt)
     h = constrain(h, "batch", None, "ff")
-    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    out = dense(h, p["wo"], "bsf,fd->bsd", dt)
     return constrain(out, "batch", None, None)
 
 
@@ -456,7 +498,7 @@ def _moe_apply_block(cfg: ModelConfig, p, x, *, capacity_factor: float | None = 
     # pin bf16 before the cross-axis scatter: XLA upcasts scatter-adds (and
     # the all-reduce realizing them across the data->expert axes) to f32,
     # doubling the dominant collective on the qwen3 train cell
-    src = jax.lax.optimization_barrier(src.astype(dt))
+    src = pin(src.astype(dt))
     buf = buf.at[slot].add(src)
     buf = constrain(buf.reshape(e, cap, d), "expert", None, None)
 
@@ -469,14 +511,14 @@ def _moe_apply_block(cfg: ModelConfig, p, x, *, capacity_factor: float | None = 
     # barrier: the f-contraction's cross-`data` psum runs in f32 on some
     # backends and convert-motion would propagate f32 through the combine
     # gather (2.15 GB/tensor at prefill_32k scale) — pin bf16 here.
-    eout = jax.lax.optimization_barrier(eout.astype(dt))
+    eout = pin(eout.astype(dt))
     eout = eout.reshape(e * cap, d)
 
     # combine
     gathered = constrain(eout[slot], "moe_tokens", None)               # (t*k, d)
     w = (gate_vals.reshape(-1) * keep).astype(dt)
     weighted = constrain(gathered * w[:, None], "moe_tokens", None)
-    weighted = jax.lax.optimization_barrier(weighted.astype(dt))
+    weighted = pin(weighted.astype(dt))
     out = jnp.zeros((t, d), dt).at[tok_idx].add(weighted)
     out = constrain(out, "moe_tokens", None)
     return out.reshape(b, s, d), aux

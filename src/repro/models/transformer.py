@@ -68,8 +68,8 @@ def _unembed(cfg: ModelConfig, params, x):
         logits = jnp.einsum("bsd,vd->bsv", x.astype(dt),
                             params["embed"]["w"].astype(dt))
     else:
-        logits = jnp.einsum("bsd,dv->bsv", x.astype(dt),
-                            params["head"]["w"].astype(dt))
+        # the head may arrive still sealed (tile layout) on the serving path
+        logits = L.dense(x.astype(dt), params["head"]["w"], "bsd,dv->bsv", dt)
     logits = constrain(logits.astype(jnp.float32), "batch", None, "vocab")
     return L.softcap(logits, cfg.logit_softcap)
 

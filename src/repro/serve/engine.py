@@ -43,34 +43,48 @@ class ServeEngine:
         self.seal = seal
         if seal is not None and seal.mode != "none":
             self.sealed = SS.seal_params(params, seal, key_bytes)
-            buffers = self.sealed.buffers
             meta = self.sealed
 
-            def _decode(bufs, cache, batch, pos):
-                sp = SS.SealedParams(bufs, meta.metas, meta.plans,
-                                     meta.treedef, meta.seal)
-                p = SS.unseal_params(sp, key_bytes)
-                return T.decode_step(cfg, p, cache, batch, pos)
+            # matmul-shaped leaves stay SEALED through the jit boundary and
+            # the layer scan (SealedTensor pytree); only the small
+            # line-layout leaves (norms, embedding, MoE experts, ...)
+            # decrypt eagerly in-graph — that difference is exactly the
+            # plaintext_bytes_per_step metric below.
+            def _materialize(tensors):
+                sp = SS.SealedParams(tensors, meta.plans, meta.treedef,
+                                     meta.seal)
+                return SS.fused_params(sp, key_bytes)
 
-            def _prefill_one(bufs, batch):
-                sp = SS.SealedParams(bufs, meta.metas, meta.plans,
-                                     meta.treedef, meta.seal)
-                p = SS.unseal_params(sp, key_bytes)
-                return T.prefill(cfg, p, batch, self.max_len)
+            def _decode(tensors, cache, batch, pos):
+                return T.decode_step(cfg, _materialize(tensors), cache,
+                                     batch, pos)
 
-            self._params_arg = buffers
+            def _prefill_one(tensors, batch):
+                return T.prefill(cfg, _materialize(tensors), batch,
+                                 self.max_len)
+
+            self._params_arg = meta.tensors
+            self._decode_fn = _decode           # unjitted, for jaxpr tests
+            self._prefill_fn = _prefill_one
             self._decode = jax.jit(_decode)
             self._prefill = jax.jit(_prefill_one)
         else:
             self.sealed = None
             self._params_arg = params
-            self._decode = jax.jit(
-                lambda p, cache, batch, pos: T.decode_step(cfg, p, cache, batch, pos))
-            self._prefill = jax.jit(
-                lambda p, batch: T.prefill(cfg, p, batch, self.max_len))
+            self._decode_fn = lambda p, cache, batch, pos: T.decode_step(
+                cfg, p, cache, batch, pos)
+            self._prefill_fn = lambda p, batch: T.prefill(
+                cfg, p, batch, self.max_len)
+            self._decode = jax.jit(self._decode_fn)
+            self._prefill = jax.jit(self._prefill_fn)
         self._next_rid = 0
         self.queue: List[Request] = []
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
+                      "fused_matmul_leaves": (len(self.sealed.fused_paths())
+                                              if self.sealed else 0),
+                      "plaintext_bytes_per_step": (
+                          self.sealed.plaintext_bytes_materialized()
+                          if self.sealed else 0)}
 
     def submit(self, prompt, max_tokens: int = 32, eos: int = -1) -> Request:
         r = Request(self._next_rid, np.asarray(prompt, np.int32), max_tokens, eos)

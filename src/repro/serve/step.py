@@ -18,13 +18,15 @@ def make_decode_step(cfg: ModelConfig):
 
 
 def make_sealed_decode_step(cfg: ModelConfig, sp: SS.SealedParams,
-                            key_bytes: bytes):
+                            key_bytes: bytes, fused: bool = True):
     """Decode with in-graph decryption: the jit boundary receives ciphertext
-    buffers; ``unseal_params`` runs on-device every step (its keystream
-    FLOPs are the crypto roofline term; the fused-kernel path in
-    repro.kernels removes the extra HBM round-trip)."""
-    def decode_step(buffers, cache, batch, pos):
-        sp2 = SS.SealedParams(buffers, sp.metas, sp.plans, sp.treedef, sp.seal)
-        params = SS.unseal_params(sp2, key_bytes)
+    ``SealedTensor`` leaves. With ``fused`` (default), matmul-shaped leaves
+    stay sealed all the way into ``kernels.sealed_matmul`` and decrypt
+    in-register; with ``fused=False`` every leaf decrypts eagerly first
+    (the paper-faithful 3x-weight-traffic baseline)."""
+    def decode_step(tensors, cache, batch, pos):
+        sp2 = SS.SealedParams(tensors, sp.plans, sp.treedef, sp.seal)
+        params = (SS.fused_params if fused else SS.unseal_params)(
+            sp2, key_bytes)
         return T.decode_step(cfg, params, cache, batch, pos)
     return decode_step

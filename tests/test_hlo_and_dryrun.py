@@ -117,8 +117,10 @@ with use_mesh(mesh, rules.arch_rules(cfg, mesh)):
     c = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                 donate_argnums=(0, 1)).lower(pspec, ospec, batch).compile()
 ma = c.memory_analysis()
+ca = c.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca   # jax<0.4.35 returns a list
 print(json.dumps({{"ok": True, "temp": ma.temp_size_in_bytes,
-                  "flops": c.cost_analysis()["flops"]}}))
+                  "flops": ca["flops"]}}))
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600)

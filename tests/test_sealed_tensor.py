@@ -1,0 +1,214 @@
+"""SealedTensor pytree + fused decrypt-in-matmul path.
+
+Covers: engine tile-layout protocol roundtrips, fused-kernel equivalence
+``sealed_matmul(x, seal(w)) == x @ w`` across SE ratios / engine modes /
+compute dtypes, scan-slicing of stacked SealedTensors, the store's
+layout split, and the serving contract: matmul-shaped leaves reach the
+fused kernel as ciphertext (jaxpr grep) and the plaintext-bytes-per-step
+metric shrinks to the non-matmul leaf fraction.
+
+Kernel shapes are shared across tests on purpose — ``sealed_matmul`` is a
+module-level jitted function, so one interpret-mode Pallas compile serves
+the whole sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SealConfig
+from repro.configs import get_reduced
+from repro.core import engine as E
+from repro.core import sealed_store as SS
+from repro.core.sealed_tensor import SealMeta, SealedTensor
+from repro.models import transformer as T
+
+KEY = bytes(range(32))
+NONCE3 = (101, 202, 303)
+M, K, N, BK, BN = 8, 64, 64, 32, 32
+
+
+def _mask(ratio: float):
+    return jnp.arange(K) < int(ratio * K)
+
+
+def _toy_sealed(mode: str, ratio: float, w):
+    eng = E.make_engine(mode, KEY)
+    mask = _mask(ratio)
+    ct = eng.encrypt_tiles(w, NONCE3, mask, 0, BK, BN)
+    meta = SealMeta(scheme=mode, layout="tiles", dtype="float32",
+                    nonce=NONCE3, shape=(K, N), n_batch=0, k_ndim=1,
+                    n_out=1, bk=BK, bn=BN)
+    return SealedTensor(ct, None, mask, jnp.asarray(eng.key_words),
+                        jnp.zeros((), jnp.uint32), meta), eng
+
+
+@pytest.mark.parametrize("mode", ["counter", "coloe"])
+@pytest.mark.parametrize("ratio", [0.0, 0.5, 1.0])
+def test_engine_tile_roundtrip(mode, ratio):
+    eng = E.make_engine(mode, KEY)
+    w = jax.random.normal(jax.random.key(0), (K, N), jnp.float32)
+    mask = _mask(ratio)
+    ct = eng.encrypt_tiles(w, NONCE3, mask, 0, BK, BN)
+    back = eng.decrypt_tiles(ct, NONCE3, mask, 0, BK, BN)
+    assert bool(jnp.all(back == w))
+    wu = jax.lax.bitcast_convert_type(w, jnp.uint32)
+    # SE bypass: unmasked rows stored verbatim, masked rows scrambled
+    assert bool(jnp.all(jnp.where(mask[:, None], True, ct == wu)))
+    if ratio > 0:
+        assert not bool(jnp.all(ct == wu))
+
+
+def test_direct_engine_has_no_tile_layout():
+    eng = E.make_engine("direct", KEY)
+    assert not eng.supports_fused
+    with pytest.raises(NotImplementedError):
+        eng.encrypt_tiles(jnp.zeros((K, N)), NONCE3, _mask(1.0), 0, BK, BN)
+
+
+@pytest.mark.parametrize("mode", ["counter", "coloe"])
+@pytest.mark.parametrize("ratio", [0.0, 0.5, 1.0])
+def test_fused_matmul_equals_plain(mode, ratio):
+    w = jax.random.normal(jax.random.key(1), (K, N), jnp.float32)
+    x = jax.random.normal(jax.random.key(2), (M, K), jnp.float32)
+    st, _ = _toy_sealed(mode, ratio, w)
+    y = st.matmul(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fused_matmul_bf16_compute_dtype():
+    """compute_dtype rounds operands like the unfused bf16 model path."""
+    w = jax.random.normal(jax.random.key(1), (K, N), jnp.float32)
+    x = jax.random.normal(jax.random.key(2), (M, K), jnp.float32)
+    st, _ = _toy_sealed("coloe", 0.5, w)
+    y = st.matmul(x, compute_dtype="bfloat16")
+    ref = jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                  preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sealed_tensor_pytree_roundtrip():
+    w = jax.random.normal(jax.random.key(1), (K, N), jnp.float32)
+    st, _ = _toy_sealed("coloe", 0.5, w)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert st2.meta == st.meta
+    assert bool(jnp.all(st2.payload == st.payload))
+    st3 = jax.tree.map(lambda a: a, st)      # identity map keeps the node
+    assert isinstance(st3, SealedTensor) and st3.meta == st.meta
+
+
+def test_scan_slices_stacked_sealed_tensor():
+    """A stacked SealedTensor rides lax.scan: each slice decrypts-in-matmul
+    under its own write counter and matches the per-slice plain matmul."""
+    n_stack = 3
+    eng = E.make_engine("coloe", KEY)
+    ws = jax.random.normal(jax.random.key(3), (n_stack, K, N), jnp.float32)
+    mask = jnp.stack([_mask(0.5)] * n_stack)
+    cts = jnp.stack([eng.encrypt_tiles(ws[i], NONCE3, mask[i], i, BK, BN)
+                     for i in range(n_stack)])
+    meta = SealMeta(scheme="coloe", layout="tiles", dtype="float32",
+                    nonce=NONCE3, shape=(n_stack, K, N), n_batch=1,
+                    k_ndim=1, n_out=1, bk=BK, bn=BN)
+    st = SealedTensor(cts, None, mask,
+                      jnp.broadcast_to(jnp.asarray(eng.key_words),
+                                       (n_stack, 8)),
+                      jnp.arange(n_stack, dtype=jnp.uint32), meta)
+    # distinct write counters -> distinct OTPs even if slices were equal
+    assert not bool(jnp.all(cts[0] == cts[1])) or not bool(
+        jnp.all(ws[0] == ws[1]))
+    x = jax.random.normal(jax.random.key(4), (M, K), jnp.float32)
+
+    def body(carry, st_slice):
+        return carry, st_slice.matmul(x)
+
+    _, ys = jax.lax.scan(body, 0, st)
+    for i in range(n_stack):
+        np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(x @ ws[i]),
+                                   rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("mode", ["direct", "counter", "coloe"])
+def test_store_layout_split_and_roundtrip(mode):
+    cfg = get_reduced("internlm2_1_8b")
+    params = T.init_params(cfg, jax.random.key(0))
+    sp = SS.seal_params(params, SealConfig(mode=mode, smart_ratio=0.5), KEY)
+    back = SS.unseal_params(sp, KEY)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert bool(jnp.all(a == b))
+    fused = set(sp.fused_paths())
+    if mode == "direct":
+        assert fused == set()
+    else:
+        # every matmul-shaped leaf is tile-sealed; small leaves stay lines
+        assert {"head/w"} | {p for p in sp.tensors if p.endswith(
+            ("wq", "wk", "wv", "attn/wo", "mlp/wi", "mlp/wg", "mlp/wo"))} \
+            == fused
+        assert all("norm" not in p and p != "embed/w" for p in fused)
+        # the metric: eager plaintext is exactly the non-tile fraction
+        total = sum(t.logical_bytes() for t in sp.tensors.values())
+        eager = sum(sp.tensors[p].logical_bytes()
+                    for p in sp.tensors if p not in fused)
+        assert sp.plaintext_bytes_materialized() == eager < total
+
+
+def test_fused_params_keeps_tiles_sealed():
+    cfg = get_reduced("internlm2_1_8b")
+    params = T.init_params(cfg, jax.random.key(0))
+    sp = SS.seal_params(params, SealConfig(mode="coloe", smart_ratio=0.5), KEY)
+    fp = SS.fused_params(sp, KEY)
+    flat = jax.tree_util.tree_flatten_with_path(
+        fp, is_leaf=lambda x: isinstance(x, SealedTensor))[0]
+    from repro.core import plan as P
+    for kp, leaf in flat:
+        path = "/".join(P._path_tuple(kp))
+        if path in sp.fused_paths():
+            assert isinstance(leaf, SealedTensor)
+        else:
+            assert not isinstance(leaf, SealedTensor)
+            orig = dict((("/".join(P._path_tuple(k)), v) for k, v in
+                         jax.tree_util.tree_flatten_with_path(params)[0]))
+            assert bool(jnp.all(leaf == orig[path]))
+
+
+def test_fused_decode_matches_plaintext_exactly():
+    """The acceptance check in miniature: a decode step over the fused
+    (still-sealed) tree produces the plaintext engine's logits bit-for-bit
+    in f32."""
+    cfg = get_reduced("internlm2_1_8b").with_(dtype="float32")
+    params = T.init_params(cfg, jax.random.key(1))
+    sp = SS.seal_params(params, SealConfig(mode="coloe", smart_ratio=0.5), KEY)
+    fp = SS.fused_params(sp, KEY)
+    batch = {"tokens": jnp.arange(16).reshape(2, 8) % cfg.vocab_size}
+    _, cache = T.prefill(cfg, params, batch, 16)
+    nxt = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    lp, _, tok_p = T.decode_step(cfg, params, cache, nxt, jnp.int32(8))
+    lf, _, tok_f = T.decode_step(cfg, fp, cache, nxt, jnp.int32(8))
+    assert bool(jnp.all(lp == lf))
+    assert bool(jnp.all(tok_p == tok_f))
+
+
+def test_serve_decode_keeps_matmul_leaves_sealed():
+    """Acceptance: the sealed ServeEngine's jitted decode function receives
+    matmul leaves as ciphertext and lowers to the fused Pallas kernel — no
+    ``unseal_params`` materialization for those leaves. Trace-only (cheap)."""
+    from repro.serve.engine import ServeEngine
+    cfg = get_reduced("internlm2_1_8b").with_(dtype="float32")
+    params = T.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=16,
+                      seal=SealConfig(mode="coloe", smart_ratio=0.5))
+    cache = jax.eval_shape(lambda p, b: T.prefill(cfg, p, b, 16),
+                           params, {"tokens": jnp.zeros((2, 4), jnp.int32)})[1]
+    jaxpr = str(jax.make_jaxpr(eng._decode_fn)(
+        eng._params_arg, cache,
+        {"tokens": jax.ShapeDtypeStruct((2, 1), jnp.int32)},
+        jax.ShapeDtypeStruct((), jnp.int32)))
+    assert "pallas_call" in jaxpr          # fused decrypt+matmul kernel
+    # one fused kernel call per matmul-shaped leaf kind survives in the
+    # scanned block + the head
+    assert eng.stats["fused_matmul_leaves"] == 8
+    # metric: only the non-matmul fraction is ever plaintext
+    total = sum(t.logical_bytes() for t in eng.sealed.tensors.values())
+    assert 0 < eng.stats["plaintext_bytes_per_step"] < 0.25 * total
