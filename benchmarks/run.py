@@ -1,4 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# ``--serve`` instead runs the continuous-batching serve benchmark and
+# writes BENCH_serve.json (tokens/s, p50/p99 latency, plaintext bytes).
+import argparse
 import os
 import sys
 
@@ -8,6 +11,14 @@ from benchmarks import figures as F
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve", action="store_true",
+                    help="run the serve benchmark -> BENCH_serve.json")
+    args = ap.parse_args()
+    if args.serve:
+        from benchmarks import serve
+        serve.main()
+        return
     suites = [
         F.fig3a_gemm_ipc,
         F.fig10_conv_ipc,

@@ -116,8 +116,19 @@ class EngineProtocol:
       (bk, bn) tile decrypts independently inside the fused Pallas kernel.
       ``supports_fused`` gates it — AES-ECB has no counter structure to
       exploit, so Direct stays on the eager line layout.
+    * ``seal_cache_blocks`` — the same address-derived-keystream trick
+      applied to paged KV-cache blocks (counter-mode engines only): the OTP
+      derives from (pool block address, per-block write counter, layer id)
+      via ``kernels.ref.cache_block_otp``, so cache blocks written at
+      decode time stay ciphertext in HBM and decrypt independently on the
+      attention-gather read path. XOR is an involution, so one method both
+      seals and unseals.
     """
     supports_fused = False
+
+    def seal_cache_blocks(self, words, nonce3, block_ids, write_counters,
+                          layer_ids):
+        raise NotImplementedError(f"{self.name}: no cache-block layout")
 
     def encrypt_tiles(self, w2d, nonce3, row_mask, write_counter: int,
                       bk: int, bn: int):
@@ -188,6 +199,25 @@ class _CtrBase(EngineProtocol):
         from repro.kernels import ref as _ref
         return _ref.unseal_weights_ref(ct2d, self.key_words, jnp.asarray(
             nonce3, jnp.uint32), bk, bn, row_mask, write_counter)
+
+    # ---- paged KV-cache block layout (cache analogue of the tile scheme:
+    # keystream from the block's pool address + write counter + layer id;
+    # the serving paths bump a block's counter on every reallocation and on
+    # every in-place tail-block rewrite, mirroring ColoE write-backs) ----
+
+    def seal_cache_blocks(self, words, nonce3, block_ids, write_counters,
+                          layer_ids):
+        """XOR-seal (or unseal) u32 cache-block payloads.
+
+        ``words``: (..., words_per_block) u32; ``block_ids`` /
+        ``write_counters`` / ``layer_ids`` broadcast to words.shape[:-1].
+        """
+        from repro.kernels import ref as _ref
+        return jnp.asarray(words, jnp.uint32) ^ _ref.cache_block_otp(
+            self.key_words, nonce3, block_ids, write_counters, layer_ids,
+            words.shape[-1])
+
+    unseal_cache_blocks = seal_cache_blocks      # XOR involution
 
 
 class CounterEngine(_CtrBase):

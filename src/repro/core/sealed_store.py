@@ -75,6 +75,26 @@ def _nonce3(path: str) -> Tuple[int, int, int]:
                  for i in (8, 12, 16))
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheSeal:
+    """Static sealing context for the paged KV cache: key words plus one
+    3-word nonce per stream (k / v). Layer identity and write counters are
+    folded in per block by ``kernels.ref.cache_block_otp``; the k/v nonces
+    keep the two streams in disjoint keystream domains even at the same
+    (block, layer, counter) address."""
+    key_words: object                 # (8,) u32
+    nonce_k: Tuple[int, int, int]
+    nonce_v: Tuple[int, int, int]
+
+
+def cache_seal_config(key_bytes: bytes) -> CacheSeal:
+    """Build the cache-block sealing context (same key as the weight store,
+    distinct nonce domain — "kvcache/" vs "tiles/")."""
+    from repro.core import cipher as C
+    return CacheSeal(jnp.asarray(C.key_to_words(key_bytes[:32])),
+                     _nonce3("kvcache/k"), _nonce3("kvcache/v"))
+
+
 def line_flags_from_mask(mask_elems, dtype, n_lines: int) -> jnp.ndarray:
     """Element-level encrypt mask -> per-128B-line flag (any elem encrypted)."""
     epw = 4 // jnp.dtype(dtype).itemsize if jnp.dtype(dtype).itemsize < 4 else 1

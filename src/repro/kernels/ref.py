@@ -42,6 +42,38 @@ def tile_counters(k: int, n: int, bk: int, bn: int, write_counter: int = 0):
     return ctr.astype(np.uint32), lane.astype(np.uint32)
 
 
+def cache_block_otp(key_words, nonce3, block_ids, write_counters, layer_ids,
+                    words_per_block: int):
+    """Keystream for paged KV-cache blocks — the cache analogue of
+    ``tile_counters``: the OTP derives from the block's pool address, its
+    write counter and the layer id, so any block seals/unseals independently
+    and the (key, nonce, counter) triple is never reused for a given key.
+
+    Derivation per ChaCha block ``c`` of a cache block ``b``:
+      counter = b * ceil(words_per_block/16) + c
+      nonce   = (nonce3[0] ^ layer_id, nonce3[1] ^ write_counter, nonce3[2])
+
+    ``block_ids`` / ``write_counters`` / ``layer_ids`` broadcast together to
+    a common shape S; returns a (*S, words_per_block) u32 keystream. XOR
+    with the block payload both seals and unseals (involution).
+    """
+    bid = jnp.asarray(block_ids, jnp.uint32)
+    wc = jnp.asarray(write_counters, jnp.uint32)
+    lid = jnp.asarray(layer_ids, jnp.uint32)
+    shape = jnp.broadcast_shapes(bid.shape, wc.shape, lid.shape)
+    bid, wc, lid = (jnp.broadcast_to(t, shape).reshape(-1)
+                    for t in (bid, wc, lid))
+    cpb = -(-words_per_block // 16)            # ChaCha blocks per cache block
+    sub = jnp.arange(cpb, dtype=jnp.uint32)
+    ctr = (bid[:, None] * jnp.uint32(cpb) + sub[None, :]).reshape(-1)
+    nonces = jnp.stack([
+        jnp.uint32(nonce3[0]) ^ jnp.repeat(lid, cpb),
+        jnp.uint32(nonce3[1]) ^ jnp.repeat(wc, cpb),
+        jnp.broadcast_to(jnp.uint32(nonce3[2]), ctr.shape)], axis=1)
+    ks = C.chacha20_block(jnp.asarray(key_words, jnp.uint32), ctr, nonces)
+    return ks.reshape(shape + (cpb * 16,))[..., :words_per_block]
+
+
 def seal_weights_ref(w, key_words, nonce_words, bk: int, bn: int,
                      row_mask=None, write_counter: int = 0):
     """Encrypt a (K, N) f32 weight for the fused kernel.

@@ -221,6 +221,13 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
         return words_to_tensor(buffers[path]["pt"].reshape(-1)[:n_words],
                                shape_, dtype_)
 
+    # KV-cache plaintext traffic: every decode step streams the whole cache
+    # through attention. This launcher's variants all keep the cache
+    # plaintext (they measure weight sealing); the paged serving path
+    # (serve/engine.py, seal_cache=True) seals it and drives this term to 0.
+    kv_bytes = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in jax.tree.leaves(specs["cache"]))
+
     t0 = time.time()
     with use_mesh(mesh, rules.arch_rules(cfg, mesh)):
         jf = jax.jit(step, in_shardings=(buf_shard, c_sh, b_sh,
@@ -242,6 +249,7 @@ def sealed_decode_variant(arch: str, shape_name: str, variant: str,
         "stored_param_bytes_global": stored,
         "plaintext_bytes_materialized_per_step": sum(m[5] for m in
                                                      meta.values()),
+        "kv_cache_plaintext_bytes_per_step": kv_bytes,
         "fused_matmul_leaves": len(tile_metas),
         "temp_gib": ma.temp_size_in_bytes / 2**30,
         "arg_gib": ma.argument_size_in_bytes / 2**30,

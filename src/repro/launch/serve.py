@@ -1,10 +1,19 @@
-"""Serving launcher: batched requests against (optionally sealed) weights.
+"""Serving launcher: staggered requests through the continuous batcher
+(or the group-drain baseline) over optionally sealed weights + KV cache.
 
 ``python -m repro.launch.serve --arch internlm2_1_8b --seal coloe``
+``python -m repro.launch.serve --engine group --stagger 2 --check``
+
+Arrivals are Poisson in *scheduler-step* units: request ``i`` is submitted
+once the engine has advanced ``arrival[i]`` steps, so the trace is
+deterministic under ``--seed`` and independent of host speed — the same
+trace the serve benchmark replays. ``--check`` exits nonzero unless every
+request completed (the CI serve-smoke job runs with it).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -13,40 +22,115 @@ import numpy as np
 from repro.config import SealConfig
 from repro.configs import get_config, get_reduced
 from repro.models import transformer as T
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import GroupServeEngine, ServeEngine
+
+
+def poisson_arrivals(n: int, mean_gap: float, rng) -> np.ndarray:
+    """Cumulative arrival times (in scheduler steps) for ``n`` requests."""
+    if mean_gap <= 0:
+        return np.zeros((n,))
+    return np.cumsum(rng.exponential(mean_gap, size=n))
+
+
+def drive(eng, prompts, arrivals, submit_kw) -> list:
+    """Feed requests as their arrival step comes due, stepping the engine
+    in between; returns the submitted Request handles, all drained.
+
+    ``submit_kw`` is one kwargs dict for every request or a list with one
+    per request. The arrival clock counts the engine's own consumed steps
+    (prefills + decode steps, relative to this call) plus idle ticks, so
+    both engine types face the identical arrival process and back-to-back
+    ``drive`` calls on one engine replay the same trace.
+    """
+    def consumed():
+        return eng.stats["decode_steps"] + eng.stats["prefills"]
+
+    base = consumed()
+    reqs, i, sim, idle = [], 0, 0.0, 0.0
+    continuous = isinstance(eng, ServeEngine)
+    while i < len(prompts) or eng.busy:
+        while i < len(prompts) and arrivals[i] <= sim:
+            kw = submit_kw[i] if isinstance(submit_kw, list) else submit_kw
+            reqs.append(eng.submit(prompts[i], **kw))
+            i += 1
+        if eng.busy:
+            if continuous:
+                eng.step()
+            else:
+                eng.run()      # group baseline drains whatever has arrived
+            sim = consumed() - base + idle
+        else:
+            idle += 1.0        # idle tick waiting for the next arrival
+            sim += 1.0
+    return reqs
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2_1_8b")
     ap.add_argument("--production", action="store_true")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "continuous", "group"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stagger", type=float, default=0.0,
+                    help="mean Poisson inter-arrival gap in scheduler steps")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seal", default="coloe",
                     choices=["none", "direct", "counter", "coloe"])
+    ap.add_argument("--seal-cache", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="seal the paged KV cache (auto: follow --seal)")
     ap.add_argument("--smart-ratio", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every request completed")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.production else get_reduced(args.arch)
     params = T.init_params(cfg, jax.random.key(0))
     seal = None if args.seal == "none" else SealConfig(
         mode=args.seal, smart_ratio=args.smart_ratio)
-    eng = ServeEngine(cfg, params, batch_slots=args.slots,
-                      max_len=args.prompt_len + args.max_tokens + 8, seal=seal)
-    rng = np.random.RandomState(0)
-    for _ in range(args.requests):
-        eng.submit(rng.randint(0, cfg.vocab_size, size=args.prompt_len),
-                   max_tokens=args.max_tokens)
+    engine = args.engine
+    if engine == "auto":
+        attn_only = all(k in ("attn", "local_attn") for k in cfg.pattern)
+        engine = "continuous" if attn_only else "group"
+    max_len = args.prompt_len + args.max_tokens + 8
+    submit_kw = dict(max_tokens=args.max_tokens)
+    if engine == "continuous":
+        seal_cache = {"auto": None, "on": True, "off": False}[args.seal_cache]
+        eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                          max_len=max_len, seal=seal, seal_cache=seal_cache,
+                          sample_seed=args.seed)
+        submit_kw.update(temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p)
+    else:
+        eng = GroupServeEngine(cfg, params, batch_slots=args.slots,
+                               max_len=max_len, seal=seal)
+
+    rng = np.random.RandomState(args.seed)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           size=rng.randint(max(1, args.prompt_len // 2),
+                                            args.prompt_len + 1))
+               for _ in range(args.requests)]
+    arrivals = poisson_arrivals(args.requests, args.stagger, rng)
     t0 = time.time()
-    done = eng.run()
+    reqs = drive(eng, prompts, arrivals, submit_kw)
     dt = time.time() - t0
-    print(f"completed {len(done)} requests in {dt:.2f}s — "
-          f"{eng.stats['tokens'] / max(dt, 1e-9):.1f} tok/s "
+    n_done = sum(r.done for r in reqs)
+    print(f"[{engine}] completed {n_done}/{len(reqs)} requests in {dt:.2f}s "
+          f"— {eng.stats['tokens'] / max(dt, 1e-9):.1f} tok/s "
           f"(seal={args.seal}) stats={eng.stats}")
-    for r in done[:3]:
+    for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out[:12]}")
+    if args.check and n_done != len(reqs):
+        print(f"FAIL: {len(reqs) - n_done} requests did not complete",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

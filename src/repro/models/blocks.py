@@ -310,12 +310,17 @@ def attn_block_sub_apply(cfg: ModelConfig, kind: str, p, h, positions, mode, cac
     is masked out automatically (invalid/rotated-out position)."""
     window = cfg.window if kind == "local_attn" else 0
     if mode == "decode":
-        pos = positions[0]
         k_new, v_new = L.project_kv(cfg, p, h, positions)
         dt = cache["k"].dtype
         k_att = jnp.concatenate([cache["k"], k_new.astype(dt)], axis=1)
         v_att = jnp.concatenate([cache["v"], v_new.astype(dt)], axis=1)
-        pos_att = jnp.concatenate([cache["pos"], pos[None]], axis=0)
+        if positions.ndim == 2:
+            # paged serving path: per-slot positions (B, 1) and per-slot
+            # key positions (B, cache_len) -> batched (B, 1, L+1) mask
+            pos_att = jnp.concatenate([cache["pos"], positions], axis=1)
+        else:
+            pos_att = jnp.concatenate([cache["pos"], positions[0][None]],
+                                      axis=0)
         out, _ = L.attention_apply(
             cfg, p, h, positions, window=window,
             kv_override=(k_att, v_att, pos_att))

@@ -3,6 +3,19 @@ RG-LRU recurrent state, SSD state, causal-conv tails.
 
 All caches are plain pytrees of arrays so they pass through jit/pjit/scan.
 Invalid KV slots carry position 2**30 so the causal mask hides them.
+
+Two cache families live here:
+
+* the **contiguous** per-request caches (``model_cache_*``) used by
+  ``transformer.prefill/decode_step`` — one (batch, cache_len, ...) buffer
+  per attention layer;
+* the **paged block pools** (``paged_pool_*``) used by the continuous
+  serving path (``models/paged.py``): a shared pool of fixed-size blocks
+  stored as raw u32 words, indexed per request through a block table.
+  Storing words (not floats) makes the pool seal-agnostic — the sealed and
+  plaintext paths share every byte of layout, so their token streams are
+  bit-identical by construction. Block 0 is reserved as a scratch target
+  for inactive slots.
 """
 from __future__ import annotations
 
@@ -12,6 +25,8 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 
 INVALID_POS = 2**30
+
+SCRATCH_BLOCK = 0      # pool block 0: write target for inactive serve slots
 
 
 def attn_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, kind: str):
@@ -106,4 +121,75 @@ def model_cache_init(cfg: ModelConfig, batch: int, cache_len: int):
         one = block_cache_init(cfg, kind, batch, cache_len)
         out.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# paged block pools (continuous serving)
+# --------------------------------------------------------------------------
+
+def kv_words_per_token(cfg: ModelConfig) -> int:
+    """u32 words one token's K (or V) occupies in a pool block."""
+    nbytes = cfg.num_kv_heads * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize
+    assert nbytes % 4 == 0, (cfg.num_kv_heads, cfg.head_dim, cfg.dtype)
+    return nbytes // 4
+
+
+def kv_to_words(x):
+    """Bitcast a (..., E) float tensor to (..., E*itemsize//4) u32 words."""
+    dt = x.dtype
+    if dt.itemsize == 4:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if dt.itemsize == 2:
+        lead, e = x.shape[:-1], x.shape[-1]
+        assert e % 2 == 0, x.shape
+        h16 = jax.lax.bitcast_convert_type(x, jnp.uint16)
+        return jax.lax.bitcast_convert_type(
+            h16.reshape(lead + (e // 2, 2)), jnp.uint32)
+    raise TypeError(f"unsupported kv dtype {dt}")
+
+
+def words_to_kv(words, dtype):
+    """Inverse of ``kv_to_words``: (..., W) u32 -> (..., E) dtype."""
+    dtype = jnp.dtype(dtype)
+    if dtype.itemsize == 4:
+        return jax.lax.bitcast_convert_type(words, dtype)
+    if dtype.itemsize == 2:
+        lead, w = words.shape[:-1], words.shape[-1]
+        u16 = jax.lax.bitcast_convert_type(words, jnp.uint16)   # (..., W, 2)
+        return jax.lax.bitcast_convert_type(u16, dtype).reshape(
+            lead + (w * 2,))
+    raise TypeError(f"unsupported kv dtype {dtype}")
+
+
+def paged_pool_spec(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """ShapeDtypeStructs of the paged pools: a tuple over pattern positions
+    of {"k", "v": (n_super, num_blocks, words_per_block) u32, "lid":
+    (n_super,) u32}. ``lid`` is the globally unique layer id folded into the
+    block keystream (nonce word 0)."""
+    n = cfg.n_superblocks()
+    wpb = block_size * kv_words_per_token(cfg)
+    out = []
+    for kind in cfg.pattern:
+        assert kind in ("attn", "local_attn"), \
+            f"paged pools cover attention layers only (got {kind!r})"
+        out.append({
+            "k": jax.ShapeDtypeStruct((n, num_blocks, wpb), jnp.uint32),
+            "v": jax.ShapeDtypeStruct((n, num_blocks, wpb), jnp.uint32),
+            "lid": jax.ShapeDtypeStruct((n,), jnp.uint32),
+        })
+    return tuple(out)
+
+
+def paged_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int):
+    spec = paged_pool_spec(cfg, num_blocks, block_size)
+    n, npat = cfg.n_superblocks(), len(cfg.pattern)
+    out = []
+    for j, sj in enumerate(spec):
+        out.append({
+            "k": jnp.zeros(sj["k"].shape, jnp.uint32),
+            "v": jnp.zeros(sj["v"].shape, jnp.uint32),
+            "lid": jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(npat)
+                   + jnp.uint32(j),
+        })
     return tuple(out)

@@ -166,10 +166,15 @@ def init_attention(cfg: ModelConfig, key):
 
 
 def _attn_mask(q_pos, k_pos, window: int):
-    """(q, k) boolean mask: causal, optionally sliding-window."""
-    m = k_pos[None, :] <= q_pos[:, None]
+    """(..., q, k) boolean mask: causal, optionally sliding-window.
+
+    Accepts 1-D (q,)/(k,) positions (shared across the batch) or batched
+    (b, q)/(b, k) positions (paged decode, where every slot sits at its own
+    sequence offset); leading axes broadcast.
+    """
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
     if window:
-        m &= (q_pos[:, None] - k_pos[None, :]) < window
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
     return m
 
 

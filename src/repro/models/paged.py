@@ -1,0 +1,208 @@
+"""Paged KV cache passes: batched decode / ragged prefill over block pools.
+
+The continuous serving path keeps every layer's KV cache in a shared pool of
+fixed-size blocks (``cache.paged_pool_init``), indexed per request slot
+through a block table. Blocks hold raw u32 words; when a ``CacheSeal`` is
+supplied they are **sealed** — XORed with a ChaCha20 keystream derived from
+(pool block address, per-block write counter, layer id) by
+``kernels.ref.cache_block_otp``, the cache analogue of the weight tiles'
+``tile_counters`` scheme:
+
+* **write** (prefill, or the per-step token append): payload is sealed
+  before it is stored, and every write to a block bumps its write counter —
+  the decode append decrypts the tail block, inserts the token, re-encrypts
+  the whole block under ``wc+1`` (ColoE-style write-back), so a (key, nonce,
+  counter) triple never covers two plaintexts;
+* **read** (attention): blocks are gathered through the table and unsealed
+  in-graph right at the consumption site — the pool itself, i.e. the
+  HBM-resident cache image, stays ciphertext.
+
+Entries at positions >= the slot's length are zeroed after the unseal (an
+uninitialized sealed block decrypts to random bits, which may be NaN
+payloads in bf16); this also makes the sealed and plaintext paths feed the
+attention bitwise-identical inputs, so their token streams agree exactly.
+
+The host side (write-counter mirror, block allocation, slot scheduling)
+lives in ``serve/engine.py``; everything here is pure and jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.kernels import ref as KR
+from repro.models import blocks as B
+from repro.models import cache as MC
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.core.sealed_store import CacheSeal
+
+
+def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
+                tables, lengths, wc):
+    """Gather one layer's blocks into the dense {"k","v","pos"} cache view
+    the decode attention consumes.
+
+    pool_j: one super-block slice {"k","v": (NB, wpb) u32, "lid": ()}.
+    tables: (B, MB) int32 pool block ids; lengths: (B,) int32; wc: (NB,) u32.
+    Returns k/v (B, L, kv_heads, head_dim) with L = MB * block_size and
+    pos (B, L) int32 (INVALID_POS beyond each slot's length).
+    """
+    b, mb = tables.shape
+    wpb = pool_j["k"].shape[-1]
+    wpt = MC.kv_words_per_token(cfg)
+    seq = mb * (wpb // wpt)
+    kw = pool_j["k"][tables]                       # (B, MB, wpb)
+    vw = pool_j["v"][tables]
+    if seal is not None:
+        wcb = wc[tables]
+        kw = kw ^ KR.cache_block_otp(seal.key_words, seal.nonce_k, tables,
+                                     wcb, pool_j["lid"], wpb)
+        vw = vw ^ KR.cache_block_otp(seal.key_words, seal.nonce_v, tables,
+                                     wcb, pool_j["lid"], wpb)
+    dt = jnp.dtype(cfg.dtype)
+    k = MC.words_to_kv(kw, dt).reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    v = MC.words_to_kv(vw, dt).reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    valid = pos < lengths[:, None]                 # (B, L)
+    k = jnp.where(valid[..., None, None], k, 0)
+    v = jnp.where(valid[..., None, None], v, 0)
+    pos = jnp.where(valid, pos, MC.INVALID_POS)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def decode_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
+                  tokens, seal: Optional[CacheSeal]):
+    """One decode step for every slot at its own position.
+
+    tokens: (B, 1) int32 (garbage for inactive slots — masked by lengths).
+    Returns (logits (B, V) f32, updates: per-position {"k_new","v_new"}
+    stacked (n_super, B, 1, kv_heads, head_dim)).
+    """
+    x = T._embed(cfg, params, {"tokens": tokens})
+    positions = lengths[:, None].astype(jnp.int32)          # (B, 1)
+
+    def body(h, xs):
+        p_slices, pool_slices = xs
+        ups = []
+        for j, kind in enumerate(cfg.pattern):
+            view = _dense_view(cfg, seal, pool_slices[j], tables, lengths, wc)
+            h, up, _ = B.block_apply(cfg, kind, p_slices[j], h, positions,
+                                     "decode", view)
+            ups.append(up)
+        return h, tuple(ups)
+
+    x, updates = lax.scan(body, x, (params["blocks"], pools))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = T._unembed(cfg, params, x)[:, 0]
+    return logits, updates
+
+
+def apply_paged_updates(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
+                        updates, tables, lengths, wc):
+    """Append each slot's new K/V token into its tail block (write path).
+
+    The tail block is fetched, unsealed under the current write counter,
+    the token's words are spliced in at word offset (length % bs) * wpt,
+    and the whole block is re-sealed under ``wc + 1`` — the host mirrors
+    the bump after the step. Inactive slots (length 0, zeroed table row)
+    land on the scratch block 0.
+    """
+    wpt = MC.kv_words_per_token(cfg)
+    b = tables.shape[0]
+    new_pools = []
+    for j in range(len(cfg.pattern)):
+        pj, uj = pools[j], updates[j]
+        wpb = pj["k"].shape[-1]
+        bs = wpb // wpt
+        off = lengths % bs                                     # (B,)
+        pb = tables[jnp.arange(b), lengths // bs]              # (B,)
+        lid = pj["lid"]                                        # (n,)
+        n = lid.shape[0]
+
+        def append(pool_words, x_new, nonce):
+            tw = MC.kv_to_words(x_new[:, :, 0].reshape(n, b, -1))  # (n,B,wpt)
+            blk = pool_words[:, pb]                                # (n,B,wpb)
+            if seal is not None:
+                blk = blk ^ KR.cache_block_otp(
+                    seal.key_words, nonce, pb, wc[pb], lid[:, None], wpb)
+            base = jnp.concatenate(
+                [tw, jnp.zeros((n, b, wpb - wpt), jnp.uint32)], axis=-1)
+            idx = (jnp.arange(wpb)[None, :] - off[:, None] * wpt) % wpb
+            rolled = jnp.take_along_axis(
+                base, jnp.broadcast_to(idx[None], (n, b, wpb)), axis=-1)
+            sel = (jnp.arange(wpb)[None, :] // wpt) == off[:, None]  # (B,wpb)
+            blk = jnp.where(sel[None], rolled, blk)
+            if seal is not None:
+                blk = blk ^ KR.cache_block_otp(
+                    seal.key_words, nonce, pb, wc[pb] + 1, lid[:, None], wpb)
+            return pool_words.at[:, pb].set(blk)
+
+        new_pools.append({
+            "k": append(pj["k"], uj["k_new"],
+                        seal.nonce_k if seal is not None else None),
+            "v": append(pj["v"], uj["v_new"],
+                        seal.nonce_v if seal is not None else None),
+            "lid": lid,
+        })
+    return tuple(new_pools)
+
+
+def prefill_logits(cfg: ModelConfig, params, tokens, true_len):
+    """Ragged prefill of a right-padded (A, S_bucket) admission batch.
+
+    Returns (logits (A, V) at each row's last real token, contiguous cache
+    from ``prefill_hidden`` for ``prefill_write`` to reseal into pools).
+    Padding tokens sit at the tail, so causality keeps every real token's
+    hidden state independent of them; their cache entries are masked out
+    downstream by the slot lengths.
+    """
+    x, cache = T.prefill_hidden(cfg, params, {"tokens": tokens},
+                                tokens.shape[1])
+    idx = (true_len.astype(jnp.int32) - 1)[:, None, None]
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[-1])), axis=1)
+    logits = T._unembed(cfg, params, last)[:, 0]
+    return logits, cache
+
+
+def prefill_write(cfg: ModelConfig, seal: Optional[CacheSeal], pools, cache,
+                  block_tables, wc):
+    """Seal a prefill's contiguous cache into pool blocks.
+
+    cache: per pattern position {"k","v": (n, A, S_bucket, h, d)}.
+    block_tables: (A, S_bucket // bs) pool ids — the host bumps the write
+    counters of these blocks *before* the call, so the seal uses the passed
+    ``wc`` directly. Dummy admission rows carry a zeroed table row and land
+    on the scratch block.
+    """
+    wpt = MC.kv_words_per_token(cfg)
+    a, nblk = block_tables.shape
+    new_pools = []
+    for j in range(len(cfg.pattern)):
+        pj, cj = pools[j], cache[j]
+        wpb = pj["k"].shape[-1]
+        n, sb = cj["k"].shape[0], cj["k"].shape[2]
+        assert sb * wpt == nblk * wpb, (sb, wpt, nblk, wpb)
+
+        def write(pool_words, kv, nonce):
+            w = MC.kv_to_words(kv.reshape(n, a, sb, -1))   # (n, A, Sb, wpt)
+            w = w.reshape(n, a, nblk, wpb)
+            if seal is not None:
+                w = w ^ KR.cache_block_otp(
+                    seal.key_words, nonce, block_tables, wc[block_tables],
+                    pj["lid"][:, None, None], wpb)
+            return pool_words.at[:, block_tables].set(w)
+
+        new_pools.append({
+            "k": write(pj["k"], cj["k"],
+                       seal.nonce_k if seal is not None else None),
+            "v": write(pj["v"], cj["v"],
+                       seal.nonce_v if seal is not None else None),
+            "lid": pj["lid"],
+        })
+    return tuple(new_pools)

@@ -134,14 +134,24 @@ def forward(cfg: ModelConfig, params, batch, *, remat: str = "none"):
                   "accuracy": jnp.mean(jnp.argmax(logits, -1) == targets)}
 
 
-def prefill(cfg: ModelConfig, params, batch, cache_len: int):
-    """Run the prompt, return (logits_last, cache). batch: {tokens|embeds}."""
+def prefill_hidden(cfg: ModelConfig, params, batch, cache_len: int):
+    """Prompt pass up to the final norm: (normed hidden (B, S, D), cache).
+
+    Shared by ``prefill`` (which unembeds the last position) and the paged
+    serving path (which unembeds a per-request last position and rewrites
+    the contiguous cache into sealed pool blocks).
+    """
     x = _embed(cfg, params, batch)
-    b, s = x.shape[0], x.shape[1]
-    positions = jnp.arange(s, dtype=jnp.int32)
+    b = x.shape[0]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
     cache0 = model_cache_init(cfg, b, cache_len)
     x, cache, _ = _run_layers(cfg, params, x, positions, "prefill", cache0, "none")
-    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.apply_norm(cfg, params["final_norm"], x), cache
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int):
+    """Run the prompt, return (logits_last, cache). batch: {tokens|embeds}."""
+    x, cache = prefill_hidden(cfg, params, batch, cache_len)
     logits = _unembed(cfg, params, x[:, -1:])
     return logits[:, 0], cache
 

@@ -1,10 +1,19 @@
-"""Batched serving engine with sealed-weight support.
+"""Serving engines over the sealed substrate.
 
-Request lifecycle: submit(prompt tokens) -> queued -> joined into the next
-prefill batch -> decoded step-by-step in the shared decode batch until EOS
-or max_tokens. Synchronous-batching design (one prefill + one decode batch
-in flight) — the right scale for an edge accelerator per the paper; the
-scheduler slot-fills finished requests each step (continuous batching).
+``ServeEngine`` is a **continuous-batching** scheduler: a fixed set of
+decode slots, per-slot admission and eviction at every step. New requests
+are admitted through a ragged bucketed prefill while other slots keep
+decoding, each slot samples with its own temperature/top-k/top-p settings
+and PRNG stream, and a finished slot's blocks are freed and refilled on the
+very next step — no slot ever idles waiting for a group to drain. The KV
+cache behind it is a paged block pool (``models/paged.py``) whose blocks
+are sealed with the same counter-mode keystream discipline as the weight
+tiles, so the HBM-resident cache image stays ciphertext end to end.
+
+``GroupServeEngine`` is the old group-drain loop (prefill a group, decode
+until every member finishes), kept as the benchmark baseline and as the
+fallback for recurrent/SSD architectures, whose prefill state does not
+tolerate the ragged right-padding the continuous path uses.
 """
 from __future__ import annotations
 
@@ -19,7 +28,9 @@ import numpy as np
 from repro.config import ModelConfig, SealConfig
 from repro.core import sealed_store as SS
 from repro.models import transformer as T
-from repro.models.cache import model_cache_init
+from repro.models.cache import paged_pool_init
+from repro.serve import sampling as SM
+from repro.serve import step as ST
 
 
 @dataclasses.dataclass
@@ -28,11 +39,281 @@ class Request:
     prompt: np.ndarray                # (S,) int32
     max_tokens: int = 32
     eos: int = -1
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
 
 
 class ServeEngine:
+    """Continuous batcher over the paged, sealed KV cache.
+
+    Host-side it keeps the block allocator, the per-slot block tables /
+    lengths, and the write-counter mirror (bumped in lockstep with the
+    device's seal-on-write); device-side it runs one jitted decode step for
+    all slots plus one jitted admission prefill per prompt-length bucket.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 256, seal: Optional[SealConfig] = None,
+                 key_bytes: bytes = bytes(range(32)), block_size: int = 16,
+                 seal_cache: Optional[bool] = None,
+                 admit_batch: Optional[int] = None, sample_seed: int = 0):
+        assert cfg.frontend is None, "serving demo targets token archs"
+        bad = [k for k in cfg.pattern if k not in ("attn", "local_attn")]
+        if bad:
+            raise ValueError(
+                f"continuous batching needs attention-only patterns (got "
+                f"{bad}); use GroupServeEngine for recurrent/SSD archs")
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.block_size = block_size
+        self.max_len = -(-max_len // block_size) * block_size
+        self.seal = seal
+        weights_sealed = seal is not None and seal.mode != "none"
+        if seal_cache is None:
+            seal_cache = weights_sealed
+        self.seal_cache = seal_cache
+
+        if weights_sealed:
+            self.sealed = SS.seal_params(params, seal, key_bytes)
+            meta = self.sealed
+
+            def _materialize(tensors):
+                sp = SS.SealedParams(tensors, meta.plans, meta.treedef,
+                                     meta.seal)
+                return SS.fused_params(sp, key_bytes)
+
+            self._params_arg = meta.tensors
+        else:
+            self.sealed = None
+            _materialize = lambda p: p
+            self._params_arg = params
+
+        cache_seal = SS.cache_seal_config(key_bytes) if seal_cache else None
+        self._decode_fn = ST.make_paged_decode_step(cfg, _materialize,
+                                                    cache_seal)
+        self._prefill_fn = ST.make_paged_prefill(cfg, _materialize,
+                                                 cache_seal)
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+
+        # host scheduler state
+        s, mb = self.slots, self.max_len // block_size
+        self.num_blocks = 1 + s * mb          # block 0 = scratch
+        self._pools = paged_pool_init(cfg, self.num_blocks, block_size)
+        self._tables = np.zeros((s, mb), np.int32)
+        self._lengths = np.zeros((s,), np.int32)
+        self._wc = np.zeros((self.num_blocks,), np.uint32)
+        self._free = list(range(1, self.num_blocks))
+        self._active: List[Optional[Request]] = [None] * s
+        self._slot_blocks: List[List[int]] = [[] for _ in range(s)]
+        self._last_tok = np.zeros((s,), np.int32)
+        self._counts = np.zeros((s,), np.int32)
+        self._key_data = np.zeros((s, 2), np.uint32)
+        self._temp = np.zeros((s,), np.float32)
+        self._topk = np.zeros((s,), np.int32)
+        self._topp = np.ones((s,), np.float32)
+        self._admit_n = min(admit_batch or max(1, batch_slots // 4),
+                            batch_slots)
+        self._sample_seed = sample_seed
+        self._next_rid = 0
+        self.queue: List[Request] = []
+        self._done: List[Request] = []
+
+        kv_pt = 0 if seal_cache else (
+            2 * cfg.n_superblocks() * len(cfg.pattern) * s * self.max_len
+            * cfg.num_kv_heads * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+        w_pt = (self.sealed.plaintext_bytes_materialized() if self.sealed
+                else sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                         for x in jax.tree.leaves(params)))
+        self.stats = {
+            "prefills": 0, "decode_steps": 0, "tokens": 0,
+            "fused_matmul_leaves": (len(self.sealed.fused_paths())
+                                    if self.sealed else 0),
+            "weights_plaintext_bytes_per_step": w_pt,
+            "kv_plaintext_bytes_per_step": kv_pt,
+            "plaintext_bytes_per_step": w_pt + kv_pt,
+        }
+
+    # -------------------------------------------------- public API
+
+    def submit(self, prompt, max_tokens: int = 32, eos: int = -1,
+               temperature: float = 0.0, top_k: int = 0,
+               top_p: float = 1.0) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        assert 1 <= len(prompt) < self.max_len, \
+            f"prompt length {len(prompt)} vs max_len {self.max_len}"
+        r = Request(self._next_rid, prompt, max_tokens, eos,
+                    temperature, top_k, top_p, t_submit=time.time())
+        self._next_rid += 1
+        self.queue.append(r)
+        return r
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued or holds a slot."""
+        return bool(self.queue) or any(r is not None for r in self._active)
+
+    def step(self) -> List[Request]:
+        """Admit what fits, advance every active slot one token; returns
+        the requests that completed during this step."""
+        n0 = len(self._done)
+        self._admit()
+        if any(r is not None for r in self._active):
+            self._decode_step()
+        return self._done[n0:]
+
+    def run(self) -> List[Request]:
+        """Drain queue + in-flight work; returns the requests completed by
+        this call (admission order can overtake across buckets)."""
+        n0 = len(self._done)
+        while self.busy:
+            before = (len(self.queue), self.stats["decode_steps"])
+            self.step()
+            after = (len(self.queue), self.stats["decode_steps"])
+            assert after != before, "scheduler made no progress"
+        return self._done[n0:]
+
+    # -------------------------------------------------- scheduling
+
+    def _mt_eff(self, r: Request) -> int:
+        return max(1, min(r.max_tokens, self.max_len - len(r.prompt)))
+
+    def _bucket(self, plen: int) -> int:
+        return -(-plen // self.block_size) * self.block_size
+
+    def _admit(self):
+        bs = self.block_size
+        while self.queue:
+            free_slots = [i for i, r in enumerate(self._active) if r is None]
+            if not free_slots:
+                return
+            bucket = self._bucket(len(self.queue[0].prompt))
+            picked: List[Request] = []
+            budget = len(self._free)
+            for r in self.queue:
+                if len(picked) >= min(self._admit_n, len(free_slots)):
+                    break
+                if self._bucket(len(r.prompt)) != bucket:
+                    break       # strict FIFO across buckets
+                need = -(-(len(r.prompt) + self._mt_eff(r)) // bs)
+                if need > budget:
+                    break
+                budget -= need
+                picked.append(r)
+            if not picked:
+                return
+            for r in picked:
+                self.queue.remove(r)
+            self._prefill_batch(picked, bucket)
+
+    def _prefill_batch(self, picked: List[Request], bucket: int):
+        bs, a = self.block_size, self._admit_n
+        nblk = bucket // bs
+        toks = np.zeros((a, bucket), np.int32)
+        true_len = np.ones((a,), np.int32)
+        block_tables = np.zeros((a, nblk), np.int32)
+        key_data = np.zeros((a, 2), np.uint32)
+        temp = np.zeros((a,), np.float32)
+        topk = np.zeros((a,), np.int32)
+        topp = np.ones((a,), np.float32)
+        rows: List[tuple] = []
+        for i, r in enumerate(picked):
+            slot = next(j for j, s in enumerate(self._active) if s is None)
+            self._active[slot] = r
+            plen = len(r.prompt)
+            need = -(-(plen + self._mt_eff(r)) // bs)
+            blocks = [self._free.pop() for _ in range(need)]
+            self._slot_blocks[slot] = blocks
+            self._tables[slot] = 0
+            self._tables[slot, :need] = blocks
+            toks[i, :plen] = r.prompt
+            true_len[i] = plen
+            block_tables[i] = blocks[:nblk]
+            key_data[i] = np.asarray(SM.request_key_data(self._sample_seed,
+                                                         r.rid))
+            temp[i], topk[i], topp[i] = r.temperature, r.top_k, r.top_p
+            self._wc[blocks[:nblk]] += 1       # sealed under the bumped wc
+            rows.append((i, slot, r))
+        self._wc[0] += 1                       # dummy rows write scratch
+        tok, _, pools = self._prefill(
+            self._params_arg, self._pools, jnp.asarray(toks),
+            jnp.asarray(true_len), jnp.asarray(block_tables),
+            jnp.asarray(self._wc), jnp.asarray(key_data), jnp.asarray(temp),
+            jnp.asarray(topk), jnp.asarray(topp))
+        self._pools = pools
+        self.stats["prefills"] += 1
+        tok = np.asarray(tok)
+        for i, slot, r in rows:
+            self._lengths[slot] = len(r.prompt)
+            self._counts[slot] = 1
+            self._last_tok[slot] = tok[i]
+            self._key_data[slot] = np.asarray(
+                SM.request_key_data(self._sample_seed, r.rid))
+            self._temp[slot] = r.temperature
+            self._topk[slot] = r.top_k
+            self._topp[slot] = r.top_p
+            nt = int(tok[i])
+            r.out.append(nt)
+            self.stats["tokens"] += 1
+            if len(r.out) >= self._mt_eff(r) or nt == r.eos:
+                self._finish(slot)
+
+    def _decode_args(self):
+        """Current decode-step operands (also used by jaxpr-level tests)."""
+        return (self._params_arg, self._pools, jnp.asarray(self._tables),
+                jnp.asarray(self._lengths), jnp.asarray(self._wc),
+                jnp.asarray(self._last_tok[:, None]),
+                jnp.asarray(self._key_data), jnp.asarray(self._counts),
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp))
+
+    def _decode_step(self):
+        tok, _, pools = self._decode(*self._decode_args())
+        self._pools = pools
+        self.stats["decode_steps"] += 1
+        tok = np.asarray(tok)
+        bs = self.block_size
+        for slot, r in enumerate(self._active):
+            if r is None:
+                continue
+            # mirror the device's seal-on-write counter bump of the tail
+            # block the new K/V token landed in
+            pb = self._tables[slot, self._lengths[slot] // bs]
+            self._wc[pb] += 1
+            self._lengths[slot] += 1
+            self._counts[slot] += 1
+            nt = int(tok[slot])
+            self._last_tok[slot] = nt
+            r.out.append(nt)
+            self.stats["tokens"] += 1
+            if len(r.out) >= self._mt_eff(r) or nt == r.eos:
+                self._finish(slot)
+        self._wc[0] += 1                       # inactive slots hit scratch
+
+    def _finish(self, slot: int):
+        r = self._active[slot]
+        r.done = True
+        r.t_done = time.time()
+        self._done.append(r)
+        self._free.extend(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self._tables[slot] = 0
+        self._lengths[slot] = 0
+        self._counts[slot] = 0
+        self._last_tok[slot] = 0
+        self._active[slot] = None
+
+
+class GroupServeEngine:
+    """Group-drain baseline: prefill a fixed group, decode greedily until
+    every member finishes — finished slots idle until the group drains.
+    Kept for benchmark comparison and for recurrent/SSD architectures."""
+
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 256, seal: Optional[SealConfig] = None,
                  key_bytes: bytes = bytes(range(32))):
@@ -45,11 +326,6 @@ class ServeEngine:
             self.sealed = SS.seal_params(params, seal, key_bytes)
             meta = self.sealed
 
-            # matmul-shaped leaves stay SEALED through the jit boundary and
-            # the layer scan (SealedTensor pytree); only the small
-            # line-layout leaves (norms, embedding, MoE experts, ...)
-            # decrypt eagerly in-graph — that difference is exactly the
-            # plaintext_bytes_per_step metric below.
             def _materialize(tensors):
                 sp = SS.SealedParams(tensors, meta.plans, meta.treedef,
                                      meta.seal)
@@ -64,10 +340,8 @@ class ServeEngine:
                                  self.max_len)
 
             self._params_arg = meta.tensors
-            self._decode_fn = _decode           # unjitted, for jaxpr tests
+            self._decode_fn = _decode
             self._prefill_fn = _prefill_one
-            self._decode = jax.jit(_decode)
-            self._prefill = jax.jit(_prefill_one)
         else:
             self.sealed = None
             self._params_arg = params
@@ -75,8 +349,8 @@ class ServeEngine:
                 cfg, p, cache, batch, pos)
             self._prefill_fn = lambda p, batch: T.prefill(
                 cfg, p, batch, self.max_len)
-            self._decode = jax.jit(self._decode_fn)
-            self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
         self._next_rid = 0
         self.queue: List[Request] = []
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
@@ -87,10 +361,15 @@ class ServeEngine:
                           if self.sealed else 0)}
 
     def submit(self, prompt, max_tokens: int = 32, eos: int = -1) -> Request:
-        r = Request(self._next_rid, np.asarray(prompt, np.int32), max_tokens, eos)
+        r = Request(self._next_rid, np.asarray(prompt, np.int32), max_tokens,
+                    eos, t_submit=time.time())
         self._next_rid += 1
         self.queue.append(r)
         return r
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue)
 
     def run(self) -> List[Request]:
         """Drain the queue; returns completed requests."""
@@ -102,20 +381,20 @@ class ServeEngine:
         return done
 
     def _run_group(self, group: List[Request]) -> List[Request]:
-        cfg = self.cfg
         b = len(group)
         plen = max(len(r.prompt) for r in group)
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(group):          # left-pad-free: right align
             toks[i, plen - len(r.prompt):] = r.prompt
-        logits, cache = self._prefill(self._params_arg, {"tokens": jnp.asarray(toks)})
+        logits, cache = self._prefill(self._params_arg,
+                                      {"tokens": jnp.asarray(toks)})
         self.stats["prefills"] += 1
         nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
         for i, r in enumerate(group):
             r.out.append(int(nxt[i]))
         pos = plen
         max_new = max(r.max_tokens for r in group)
-        for t in range(1, max_new):
+        for _ in range(1, max_new):
             if pos >= self.max_len:
                 break
             batch = {"tokens": jnp.asarray(nxt[:, None])}
@@ -132,8 +411,11 @@ class ServeEngine:
                 self.stats["tokens"] += 1
                 if len(r.out) >= r.max_tokens or nt == r.eos:
                     r.done = True
+                    r.t_done = time.time()
             if all(r.done for r in group):
                 break
         for r in group:
-            r.done = True
+            if not r.done:
+                r.done = True
+                r.t_done = time.time()
         return group

@@ -1,6 +1,8 @@
-"""Serve (decode) step factories — incl. the sealed-weights path where the
+"""Serve step factories — incl. the sealed-weights path where the
 HBM-resident model stays ciphertext and is decrypted on use (the paper's
-threat model: plaintext never crosses the probe-able boundary)."""
+threat model: plaintext never crosses the probe-able boundary), and the
+paged-cache continuous-batching steps where the KV cache gets the same
+treatment."""
 from __future__ import annotations
 
 import jax
@@ -8,13 +10,53 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core import sealed_store as SS
+from repro.models import paged as PG
 from repro.models import transformer as T
+from repro.serve import sampling as SM
 
 
 def make_decode_step(cfg: ModelConfig):
     def decode_step(params, cache, batch, pos):
         return T.decode_step(cfg, params, cache, batch, pos)
     return decode_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, materialize, cache_seal):
+    """Continuous-batching decode step over the paged (optionally sealed)
+    KV pools: every slot advances one token at its own position, new K/V
+    are appended (sealed) into each slot's tail block, and the next token
+    is sampled with each request's own PRNG stream.
+
+    ``materialize`` maps the jit-boundary param pytree (possibly
+    ``SealedTensor`` ciphertext leaves) to the serving param view.
+    """
+    def decode_step(tensors, pools, tables, lengths, wc, tokens, key_data,
+                    counts, temperature, top_k, top_p):
+        params = materialize(tensors)
+        logits, updates = PG.decode_logits(cfg, params, pools, tables,
+                                           lengths, wc, tokens, cache_seal)
+        pools = PG.apply_paged_updates(cfg, cache_seal, pools, updates,
+                                       tables, lengths, wc)
+        keys = SM.fold_token_keys(key_data, counts)
+        tok = SM.sample_logits(logits, keys, temperature, top_k, top_p)
+        return tok, logits, pools
+    return decode_step
+
+
+def make_paged_prefill(cfg: ModelConfig, materialize, cache_seal):
+    """Ragged admission prefill: run a right-padded (A, S_bucket) batch,
+    seal its KV into the admitted slots' pool blocks, and sample each
+    request's first token (generation index 0)."""
+    def prefill(tensors, pools, tokens, true_len, block_tables, wc,
+                key_data, temperature, top_k, top_p):
+        params = materialize(tensors)
+        logits, cache = PG.prefill_logits(cfg, params, tokens, true_len)
+        pools = PG.prefill_write(cfg, cache_seal, pools, cache,
+                                 block_tables, wc)
+        keys = SM.fold_token_keys(key_data, jnp.zeros_like(true_len))
+        tok = SM.sample_logits(logits, keys, temperature, top_k, top_p)
+        return tok, logits, pools
+    return prefill
 
 
 def make_sealed_decode_step(cfg: ModelConfig, sp: SS.SealedParams,

@@ -1,0 +1,117 @@
+"""Per-request sampling: temperature / top-k / top-p / PRNG reproducibility.
+
+All tests run on raw logits batches — no model, so they are cheap. The
+contract under test is the serving one: mixed per-row settings in one
+batched call, deterministic streams keyed by (seed, rid, token index).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import sampling as SM
+
+V = 64
+
+
+def _logits(b, seed=0):
+    return jax.random.normal(jax.random.key(seed), (b, V), jnp.float32)
+
+
+def _keys(b, seed=7):
+    kd = np.stack([SM.request_key_data(seed, r) for r in range(b)])
+    return SM.fold_token_keys(kd, jnp.zeros((b,), jnp.int32))
+
+
+def test_temperature_zero_is_exact_argmax():
+    logits = _logits(8)
+    tok = SM.sample_logits(logits, _keys(8), jnp.zeros((8,)),
+                           jnp.zeros((8,), jnp.int32), jnp.ones((8,)))
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_temperature_to_zero_limit_matches_greedy():
+    """As T -> 0 the softmax concentrates on the argmax, so sampling at a
+    tiny positive temperature reproduces the greedy choice."""
+    logits = _logits(8, seed=1)
+    tok = SM.sample_logits(logits, _keys(8), jnp.full((8,), 1e-5),
+                           jnp.zeros((8,), jnp.int32), jnp.ones((8,)))
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_top_k_mass_stays_in_top_k(k):
+    logits = jnp.tile(_logits(1, seed=2), (64, 1))   # one row, many draws
+    kd = np.stack([SM.request_key_data(0, r) for r in range(64)])
+    keys = SM.fold_token_keys(kd, jnp.zeros((64,), jnp.int32))
+    tok = np.asarray(SM.sample_logits(
+        logits, keys, jnp.ones((64,)), jnp.full((64,), k, jnp.int32),
+        jnp.ones((64,))))
+    allowed = set(np.asarray(jnp.argsort(-logits[0]))[:k].tolist())
+    assert set(tok.tolist()) <= allowed
+    if k > 1:           # with 64 independent draws the cut should be seen
+        assert len(set(tok.tolist())) > 1
+
+
+def test_top_p_nucleus_cut():
+    """Rows sample only from the smallest prefix reaching mass top_p, and
+    the argmax always survives even when top_p < its own probability."""
+    probs = np.full((V,), 1e-4)
+    probs[:4] = [0.55, 0.25, 0.12, 0.05]
+    logits = jnp.tile(jnp.asarray(np.log(probs / probs.sum()),
+                                  jnp.float32)[None], (128, 1))
+    kd = np.stack([SM.request_key_data(3, r) for r in range(128)])
+    keys = SM.fold_token_keys(kd, jnp.zeros((128,), jnp.int32))
+    tok = np.asarray(SM.sample_logits(
+        logits, keys, jnp.ones((128,)), jnp.zeros((128,), jnp.int32),
+        jnp.full((128,), 0.9)))
+    assert set(tok.tolist()) <= {0, 1, 2, 3}        # nucleus at 0.9
+    tok = np.asarray(SM.sample_logits(
+        logits, keys, jnp.ones((128,)), jnp.zeros((128,), jnp.int32),
+        jnp.full((128,), 0.1)))
+    assert set(tok.tolist()) == {0}                 # argmax survives
+
+
+def test_mixed_rows_one_call():
+    """A greedy row, a top-k row and a top-p row share one batched call."""
+    logits = _logits(3, seed=4)
+    tok = np.asarray(SM.sample_logits(
+        logits, _keys(3), jnp.asarray([0.0, 1.0, 1.0]),
+        jnp.asarray([0, 2, 0], jnp.int32), jnp.asarray([1.0, 1.0, 0.5])))
+    assert tok[0] == int(jnp.argmax(logits[0]))
+    assert tok[1] in np.asarray(jnp.argsort(-logits[1]))[:2]
+
+
+def test_bit_reproducible_streams():
+    """Same (seed, rid, token index) -> identical tokens, independent of
+    batch composition / slot placement."""
+    logits = _logits(4, seed=5)
+    kd = np.stack([SM.request_key_data(11, r) for r in [3, 1, 4, 1]])
+    counts = jnp.asarray([0, 2, 5, 2], jnp.int32)
+    args = (jnp.ones((4,)), jnp.full((4,), 8, jnp.int32),
+            jnp.full((4,), 0.95))
+    t1 = np.asarray(SM.sample_logits(
+        logits, SM.fold_token_keys(kd, counts), *args))
+    t2 = np.asarray(SM.sample_logits(
+        logits, SM.fold_token_keys(kd, counts), *args))
+    np.testing.assert_array_equal(t1, t2)
+    # rows 1 and 3 are the same (rid=1, n=2) request-stream and logits row?
+    # no — different logits rows; instead permute the batch and check each
+    # request's draw only depends on its own (key, logits) pair.
+    perm = [2, 0, 3, 1]
+    t3 = np.asarray(SM.sample_logits(
+        logits[jnp.asarray(perm)], SM.fold_token_keys(kd[perm], counts[
+            jnp.asarray(perm)]), args[0][jnp.asarray(perm)],
+        args[1][jnp.asarray(perm)], args[2][jnp.asarray(perm)]))
+    np.testing.assert_array_equal(t3, t1[perm])
+
+
+def test_request_key_data_deterministic_and_distinct():
+    a = np.asarray(SM.request_key_data(0, 1))
+    b = np.asarray(SM.request_key_data(0, 1))
+    c = np.asarray(SM.request_key_data(0, 2))
+    d = np.asarray(SM.request_key_data(1, 1))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c) and not np.array_equal(a, d)

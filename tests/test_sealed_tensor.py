@@ -199,12 +199,7 @@ def test_serve_decode_keeps_matmul_leaves_sealed():
     params = T.init_params(cfg, jax.random.key(0))
     eng = ServeEngine(cfg, params, batch_slots=2, max_len=16,
                       seal=SealConfig(mode="coloe", smart_ratio=0.5))
-    cache = jax.eval_shape(lambda p, b: T.prefill(cfg, p, b, 16),
-                           params, {"tokens": jnp.zeros((2, 4), jnp.int32)})[1]
-    jaxpr = str(jax.make_jaxpr(eng._decode_fn)(
-        eng._params_arg, cache,
-        {"tokens": jax.ShapeDtypeStruct((2, 1), jnp.int32)},
-        jax.ShapeDtypeStruct((), jnp.int32)))
+    jaxpr = str(jax.make_jaxpr(eng._decode_fn)(*eng._decode_args()))
     assert "pallas_call" in jaxpr          # fused decrypt+matmul kernel
     # one fused kernel call per matmul-shaped leaf kind survives in the
     # scanned block + the head
