@@ -14,10 +14,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--serve", action="store_true",
                     help="run the serve benchmark -> BENCH_serve.json")
+    ap.add_argument("--slots", default="",
+                    help="comma list for the serve slots sweep, e.g. "
+                         "16,64,256 (with --serve)")
     args = ap.parse_args()
     if args.serve:
         from benchmarks import serve
-        serve.main()
+        sweep = (tuple(int(s) for s in args.slots.split(","))
+                 if args.slots else None)
+        serve.main(sweep_slots=sweep)
         return
     suites = [
         F.fig3a_gemm_ipc,

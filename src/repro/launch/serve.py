@@ -3,6 +3,8 @@
 
 ``python -m repro.launch.serve --arch internlm2_1_8b --seal coloe``
 ``python -m repro.launch.serve --engine group --stagger 2 --check``
+``python -m repro.launch.serve --prefix-share --chunked-prefill \
+    --shared-prefix 32 --expect-shared --compare-sealed``
 
 Arrivals are Poisson in *scheduler-step* units: request ``i`` is submitted
 once the engine has advanced ``arrival[i]`` steps, so the trace is
@@ -87,6 +89,20 @@ def main():
                     help="seal the paged KV cache (auto: follow --seal)")
     ap.add_argument("--smart-ratio", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="copy-on-write prefix sharing across requests")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="report chunked-prefill stats (admission always "
+                         "prefills in chunks; this just surfaces the knob)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="prefill chunk width in tokens (0: 2x block size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every prompt this many common prefix tokens")
+    ap.add_argument("--compare-sealed", action="store_true",
+                    help="replay the trace with a sealed cache and require "
+                         "bit-identical token streams (continuous only)")
+    ap.add_argument("--expect-shared", action="store_true",
+                    help="exit nonzero unless shared_prefix_blocks > 0")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless every request completed")
     args = ap.parse_args()
@@ -99,37 +115,72 @@ def main():
     if engine == "auto":
         attn_only = all(k in ("attn", "local_attn") for k in cfg.pattern)
         engine = "continuous" if attn_only else "group"
-    max_len = args.prompt_len + args.max_tokens + 8
+    max_len = args.shared_prefix + args.prompt_len + args.max_tokens + 8
     submit_kw = dict(max_tokens=args.max_tokens)
-    if engine == "continuous":
+
+    def build(seal_cache_override=None):
+        if engine != "continuous":
+            return GroupServeEngine(cfg, params, batch_slots=args.slots,
+                                    max_len=max_len, seal=seal)
         seal_cache = {"auto": None, "on": True, "off": False}[args.seal_cache]
-        eng = ServeEngine(cfg, params, batch_slots=args.slots,
-                          max_len=max_len, seal=seal, seal_cache=seal_cache,
-                          sample_seed=args.seed)
+        if seal_cache_override is not None:
+            seal_cache = seal_cache_override
+        return ServeEngine(cfg, params, batch_slots=args.slots,
+                           max_len=max_len, seal=seal, seal_cache=seal_cache,
+                           sample_seed=args.seed,
+                           prefix_share=args.prefix_share,
+                           chunk_tokens=args.chunk_tokens or None)
+
+    eng = build()
+    if engine == "continuous":
         submit_kw.update(temperature=args.temperature, top_k=args.top_k,
                          top_p=args.top_p)
-    else:
-        eng = GroupServeEngine(cfg, params, batch_slots=args.slots,
-                               max_len=max_len, seal=seal)
 
     rng = np.random.RandomState(args.seed)
-    prompts = [rng.randint(0, cfg.vocab_size,
-                           size=rng.randint(max(1, args.prompt_len // 2),
-                                            args.prompt_len + 1))
+    shared = rng.randint(0, cfg.vocab_size, size=args.shared_prefix)
+    prompts = [np.concatenate([
+                   shared,
+                   rng.randint(0, cfg.vocab_size,
+                               size=rng.randint(max(1, args.prompt_len // 2),
+                                                args.prompt_len + 1))])
                for _ in range(args.requests)]
     arrivals = poisson_arrivals(args.requests, args.stagger, rng)
     t0 = time.time()
     reqs = drive(eng, prompts, arrivals, submit_kw)
     dt = time.time() - t0
     n_done = sum(r.done for r in reqs)
+    extra = ""
+    if engine == "continuous":
+        extra = (f" chunks={eng.stats['prefill_chunks']}"
+                 f" shared_blocks={eng.stats['shared_prefix_blocks']}"
+                 f" shared_tokens={eng.stats['shared_prefix_tokens']}"
+                 f" cow={eng.stats['cow_copies']}")
     print(f"[{engine}] completed {n_done}/{len(reqs)} requests in {dt:.2f}s "
           f"— {eng.stats['tokens'] / max(dt, 1e-9):.1f} tok/s "
-          f"(seal={args.seal}) stats={eng.stats}")
+          f"(seal={args.seal}){extra} stats={eng.stats}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out[:12]}")
+    ok = True
     if args.check and n_done != len(reqs):
         print(f"FAIL: {len(reqs) - n_done} requests did not complete",
               file=sys.stderr)
+        ok = False
+    if args.expect_shared and eng.stats.get("shared_prefix_blocks", 0) <= 0:
+        print("FAIL: no prefix blocks were shared", file=sys.stderr)
+        ok = False
+    if args.compare_sealed and engine == "continuous":
+        other = build(seal_cache_override=not eng.seal_cache)
+        reqs2 = drive(other, prompts, arrivals, submit_kw)
+        a = [r.out for r in reqs]
+        b = [r.out for r in reqs2]
+        if a != b:
+            print("FAIL: sealed and plaintext token streams differ",
+                  file=sys.stderr)
+            ok = False
+        else:
+            which = "sealed" if other.seal_cache else "plaintext"
+            print(f"  replay with {which} cache: token streams bit-identical")
+    if not ok:
         sys.exit(1)
 
 

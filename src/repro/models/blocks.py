@@ -4,8 +4,11 @@ Each block exposes:
   init_block(cfg, kind, key)                          -> params
   block_apply(cfg, kind, params, x, positions, mode, cache) -> (y, cache', aux)
 
-mode: "train" | "prefill" | "decode". In decode mode x is (B, 1, D) and the
-returned cache slice replaces the layer's cache.
+mode: "train" | "prefill" | "decode" | "chunk". In decode mode x is
+(B, 1, D) and the returned cache slice replaces the layer's cache. "chunk"
+is the paged chunked-prefill mode: x is (B, C, D), the cache is the dense
+paged view, and the chunk's fresh K/V are spliced in at their absolute
+positions before attention.
 """
 from __future__ import annotations
 
@@ -324,6 +327,29 @@ def attn_block_sub_apply(cfg: ModelConfig, kind: str, p, h, positions, mode, cac
         out, _ = L.attention_apply(
             cfg, p, h, positions, window=window,
             kv_override=(k_att, v_att, pos_att))
+        update = {"k_new": k_new.astype(dt), "v_new": v_new.astype(dt)}
+        return out, update
+    if mode == "chunk":
+        # Chunked prefill over the paged view: the dense view is
+        # identity-indexed (view index == absolute position), so scattering
+        # the chunk's fresh K/V at their positions reproduces the exact
+        # layout of a contiguous prefill padded to the view width — the
+        # attention reduction is bitwise identical to the one-shot path.
+        # Rows are ragged: row i holds cache["cl"][i] real tokens; padded
+        # tokens scatter to a dropped out-of-bounds index.
+        k_new, v_new = L.project_kv(cfg, p, h, positions)
+        dt = cache["k"].dtype
+        w = cache["k"].shape[1]
+        c = positions.shape[1]
+        tgt = jnp.where(jnp.arange(c)[None, :] < cache["cl"][:, None],
+                        positions, w)                         # (B, C)
+        k_att = jax.vmap(lambda ck, ti, kn: ck.at[ti].set(kn, mode="drop"))(
+            cache["k"], tgt, k_new.astype(dt))
+        v_att = jax.vmap(lambda cv, ti, vn: cv.at[ti].set(vn, mode="drop"))(
+            cache["v"], tgt, v_new.astype(dt))
+        out, _ = L.attention_apply(
+            cfg, p, h, positions, window=window,
+            kv_override=(k_att, v_att, cache["pos"]))
         update = {"k_new": k_new.astype(dt), "v_new": v_new.astype(dt)}
         return out, update
     impl = "blockwise" if (mode == "prefill" and h.shape[1] > 8192) else "naive"

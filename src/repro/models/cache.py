@@ -1,5 +1,6 @@
 """Decode-time state: KV caches (global + sliding-window ring buffers),
-RG-LRU recurrent state, SSD state, causal-conv tails.
+RG-LRU recurrent state, SSD state, causal-conv tails — plus the host-side
+block allocator and copy-on-write prefix registry behind the paged pools.
 
 All caches are plain pytrees of arrays so they pass through jit/pjit/scan.
 Invalid KV slots carry position 2**30 so the causal mask hides them.
@@ -179,6 +180,170 @@ def paged_pool_spec(cfg: ModelConfig, num_blocks: int, block_size: int):
             "lid": jax.ShapeDtypeStruct((n,), jnp.uint32),
         })
     return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# host-side block accounting: refcounted allocator + prefix registry
+# --------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Refcounted free-list allocator over pool blocks 1..num_blocks-1
+    (block 0 is the reserved scratch target).
+
+    Shared prefix blocks are referenced by several slots (and by the
+    ``PrefixRegistry``) at once; a block returns to the free list only when
+    its last reader drops it. Counter-mode sealing makes multi-reader
+    blocks free: the OTP derives from the pool address + write counter, so
+    N tables can unseal the same ciphertext block with zero re-encryption.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids
+        self.refcount = [0] * num_blocks
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int):
+        """Allocate n blocks at refcount 1; returns None if short."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self.refcount[b] = 1
+        return out
+
+    def incref(self, blocks):
+        for b in blocks:
+            assert self.refcount[b] > 0, f"incref of free block {b}"
+            self.refcount[b] += 1
+
+    def decref(self, blocks):
+        """Drop one reference per block; frees blocks reaching zero."""
+        freed = []
+        for b in blocks:
+            assert self.refcount[b] > 0, f"decref of free block {b}"
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                self._free.append(b)
+                freed.append(b)
+        return freed
+
+
+class PrefixRegistry:
+    """Prefix-hash -> block map for copy-on-write prefix sharing.
+
+    Full blocks are keyed by a chain hash over their token contents (key_i
+    depends on every token in blocks [0, i]), so a lookup walks the prompt
+    block-by-block and stops at the first miss — identical prefixes map to
+    identical chains regardless of which request produced them. A *partial*
+    entry additionally records the committed token tail living at the start
+    of a block that is not yet full (the prompt tail of the donor); a match
+    against it shares those tokens too, and the sharer copy-on-writes the
+    block before appending into it (``serve/engine.py``).
+
+    The registry holds one reference per registered block; ``evict_lru``
+    releases least-recently-used chains back to the allocator when
+    admission runs short of free blocks.
+    """
+
+    def __init__(self, alloc: BlockAllocator, block_size: int):
+        self.alloc = alloc
+        self.bs = block_size
+        self._full = {}       # chain_key -> block id
+        self._partial = {}    # chain_key of parent -> (block id, token tuple)
+        self._lru = {}        # chain_key -> last-use tick (full entries)
+        self._tick = 0
+        self.hits = 0         # blocks served from the registry
+
+    @staticmethod
+    def chain_key(parent, block_tokens) -> int:
+        return hash((parent, tuple(int(t) for t in block_tokens)))
+
+    def match(self, prompt):
+        """Longest shared prefix for ``prompt``.
+
+        Returns (full_blocks, partial, n_shared): ``full_blocks`` are
+        registered block ids covering prompt[:len(full_blocks)*bs],
+        ``partial`` is an optional (block_id, n_tokens) extending the chain
+        mid-block, and ``n_shared`` the total shared token count. At least
+        one prompt token is always left to recompute (its logits seed the
+        first sampled token), so n_shared <= len(prompt) - 1.
+        """
+        bs, plen = self.bs, len(prompt)
+        self._tick += 1
+        full, key = [], None
+        while (len(full) + 1) * bs <= plen - 1:
+            i = len(full)
+            k = self.chain_key(key, prompt[i * bs:(i + 1) * bs])
+            b = self._full.get(k)
+            if b is None:
+                break
+            key = k
+            full.append(b)
+            self._lru[key] = self._tick
+        n_shared = len(full) * bs
+        partial = None
+        ent = self._partial.get(key)
+        if ent is not None:
+            b, toks = ent
+            j = 0
+            while (j < len(toks) and n_shared + j < plen - 1
+                   and int(prompt[n_shared + j]) == toks[j]):
+                j += 1
+            if j > 0:
+                partial = (b, j)
+                n_shared += j
+        self.hits += len(full) + (1 if partial else 0)
+        return full, partial, n_shared
+
+    def register(self, prompt, blocks):
+        """Record a freshly prefilled prompt: ``blocks`` is the slot's
+        table prefix covering the prompt. Newly registered blocks gain a
+        registry reference; chains already present are left untouched."""
+        bs, plen = self.bs, len(prompt)
+        key = None
+        for i in range(plen // bs):
+            k = self.chain_key(key, prompt[i * bs:(i + 1) * bs])
+            if k not in self._full:
+                self._full[k] = blocks[i]
+                self.alloc.incref([blocks[i]])
+            key = k
+            self._lru[key] = self._tick
+        tail = tuple(int(t) for t in prompt[(plen // bs) * bs:])
+        if tail and key not in self._partial:
+            b = blocks[plen // bs]
+            self._partial[key] = (b, tail)
+            self.alloc.incref([b])
+
+    def evict_lru(self, need_free: int) -> int:
+        """Release LRU chains until the allocator has ``need_free`` free
+        blocks (or nothing evictable remains). Only releases blocks whose
+        sole reference is the registry's — blocks shared by live slots
+        stay put. Returns the number of blocks freed."""
+        freed = 0
+        for key in sorted(self._lru, key=self._lru.get):
+            if self.alloc.free_count >= need_free:
+                break
+            blocks = []
+            if key in self._full and self.alloc.refcount[self._full[key]] == 1:
+                blocks.append(self._full.pop(key))
+                self._lru.pop(key)
+            ent = self._partial.get(key)
+            if ent and self.alloc.refcount[ent[0]] == 1:
+                blocks.append(self._partial.pop(key)[0])
+            freed += len(self.alloc.decref(blocks))
+        # drop partial entries whose parent chain is gone
+        dead = [k for k in self._partial
+                if k is not None and k not in self._full]
+        for k in dead:
+            if self.alloc.free_count >= need_free:
+                break
+            if self.alloc.refcount[self._partial[k][0]] == 1:
+                freed += len(self.alloc.decref([self._partial.pop(k)[0]]))
+        return freed
 
 
 def paged_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int):

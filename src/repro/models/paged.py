@@ -43,7 +43,7 @@ from repro.core.sealed_store import CacheSeal
 
 
 def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
-                tables, lengths, wc):
+                tables, lengths, wc, pos_len=None):
     """Gather one layer's blocks into the dense {"k","v","pos"} cache view
     the decode attention consumes.
 
@@ -51,6 +51,11 @@ def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
     tables: (B, MB) int32 pool block ids; lengths: (B,) int32; wc: (NB,) u32.
     Returns k/v (B, L, kv_heads, head_dim) with L = MB * block_size and
     pos (B, L) int32 (INVALID_POS beyond each slot's length).
+
+    pos_len (B,) optionally extends the *position* validity past ``lengths``
+    for the chunked-prefill path, which splices the chunk's fresh K/V into
+    the zeroed tail of this view at their absolute positions — entry j is a
+    real key for j < pos_len even though only j < lengths came from the pool.
     """
     b, mb = tables.shape
     wpb = pool_j["k"].shape[-1]
@@ -71,7 +76,8 @@ def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
     valid = pos < lengths[:, None]                 # (B, L)
     k = jnp.where(valid[..., None, None], k, 0)
     v = jnp.where(valid[..., None, None], v, 0)
-    pos = jnp.where(valid, pos, MC.INVALID_POS)
+    vpos = valid if pos_len is None else pos < pos_len[:, None]
+    pos = jnp.where(vpos, pos, MC.INVALID_POS)
     return {"k": k, "v": v, "pos": pos}
 
 
@@ -100,6 +106,158 @@ def decode_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = T._unembed(cfg, params, x)[:, 0]
     return logits, updates
+
+
+def chunk_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
+                 tokens, chunk_len, seal: Optional[CacheSeal]):
+    """One chunked-prefill pass: row i holds ``chunk_len[i]`` prompt tokens
+    at absolute positions [lengths[i], lengths[i] + chunk_len[i]).
+
+    Each layer's attention runs over the paged view with the chunk's fresh
+    K/V spliced in at their absolute positions ("chunk" mode in
+    ``blocks.block_apply``) — every key sits at view index == position, the
+    exact layout of a contiguous prefill, so a chunked prefill reproduces
+    the one-shot ``prefill_logits`` bit-for-bit (given matching view
+    widths). Returns (logits (B, V) at each row's last chunk token,
+    updates: per layer {"k_new","v_new"} stacked (n, B, C, kv_heads, hd)
+    for ``append_tokens`` to seal into the pools).
+    """
+    x = T._embed(cfg, params, {"tokens": tokens})
+    c = tokens.shape[1]
+    positions = (lengths[:, None]
+                 + jnp.arange(c, dtype=jnp.int32)[None, :])     # (B, C)
+
+    def body(h, xs):
+        p_slices, pool_slices = xs
+        ups = []
+        for j, kind in enumerate(cfg.pattern):
+            view = _dense_view(cfg, seal, pool_slices[j], tables, lengths,
+                               wc, pos_len=lengths + chunk_len)
+            view["cl"] = chunk_len
+            h, up, _ = B.block_apply(cfg, kind, p_slices[j], h, positions,
+                                     "chunk", view)
+            ups.append(up)
+        return h, tuple(ups)
+
+    x, updates = lax.scan(body, x, (params["blocks"], pools))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    idx = jnp.maximum(chunk_len - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[-1])), axis=1)
+    logits = T._unembed(cfg, params, last)[:, 0]
+    return logits, updates
+
+
+def append_tokens(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
+                  updates, tables, lengths, counts, wc):
+    """Splice each row's ``counts[i]`` new K/V tokens into its blocks at
+    positions [lengths[i], lengths[i] + counts[i]) — the unified write path
+    for the decode append (C == 1) and the chunked prefill (C == chunk).
+
+    Touched blocks are fetched, unsealed under the current write counter,
+    spliced, and re-sealed under ``wc + 1``; ``wc`` is bumped in the
+    returned array (device-resident scheduler state — the host keeps only a
+    debug mirror). Rows with counts == 0 touch nothing: untouched blocks
+    are scattered with dropped (out-of-bounds) indices, so masked slots
+    cost no writes and no counter bumps. Returns (pools, wc).
+    """
+    wpt = MC.kv_words_per_token(cfg)
+    b, mb = tables.shape
+    nb = wc.shape[0]
+    new_pools = []
+    wc_out = wc
+    for j in range(len(cfg.pattern)):
+        pj, uj = pools[j], updates[j]
+        wpb = pj["k"].shape[-1]
+        bs = wpb // wpt
+        c = uj["k_new"].shape[2]
+        nspan = 1 + (c + bs - 2) // bs         # blocks a chunk write can span
+        lid = pj["lid"]
+        n = lid.shape[0]
+        o = lengths % bs                                         # (B,)
+        span = (lengths // bs)[:, None] + jnp.arange(nspan)[None, :]
+        span = jnp.minimum(span, mb - 1)
+        pb = jnp.take_along_axis(tables, span, axis=1)           # (B, nspan)
+        s_id = jnp.arange(nspan)[None, :]
+        touched = ((s_id * bs < (o + counts)[:, None])
+                   & ((s_id + 1) * bs > o[:, None])
+                   & (counts > 0)[:, None])                      # (B, nspan)
+        w2 = nspan * wpb
+        widx = jnp.arange(w2)
+        tok_of_w = widx // wpt                                   # window token
+        sel = ((tok_of_w[None, :] >= o[:, None])
+               & (tok_of_w[None, :] < (o + counts)[:, None]))    # (B, w2)
+        roll = (widx[None, :] - (o * wpt)[:, None]) % w2         # (B, w2)
+
+        def splice(pool_words, x_new, nonce):
+            tw = MC.kv_to_words(x_new.reshape(n, b, c, -1))      # (n,B,C,wpt)
+            base = jnp.concatenate(
+                [tw.reshape(n, b, c * wpt),
+                 jnp.zeros((n, b, w2 - c * wpt), jnp.uint32)], axis=-1)
+            rolled = jnp.take_along_axis(
+                base, jnp.broadcast_to(roll[None], (n, b, w2)), axis=-1)
+            blk = pool_words[:, pb]                              # (n,B,ns,wpb)
+            flat = blk.reshape(n, b, w2)
+            if seal is not None:
+                otp0 = KR.cache_block_otp(seal.key_words, nonce, pb, wc[pb],
+                                          lid[:, None, None], wpb)
+                otp1 = KR.cache_block_otp(seal.key_words, nonce, pb,
+                                          wc[pb] + 1, lid[:, None, None], wpb)
+                flat = flat ^ otp0.reshape(n, b, w2)
+            out = jnp.where(sel[None], rolled, flat)
+            if seal is not None:
+                out = out ^ otp1.reshape(n, b, w2)
+            out = out.reshape(n, b, nspan, wpb)
+            out = jnp.where(touched[None, :, :, None], out, blk)
+            tgt = jnp.where(touched, pb, nb)       # untouched -> dropped
+            return pool_words.at[:, tgt].set(out, mode="drop")
+
+        new_pools.append({
+            "k": splice(pj["k"], uj["k_new"],
+                        seal.nonce_k if seal is not None else None),
+            "v": splice(pj["v"], uj["v_new"],
+                        seal.nonce_v if seal is not None else None),
+            "lid": lid,
+        })
+        if j == 0:
+            tgt = jnp.where(touched, pb, nb)
+            wc_out = wc.at[tgt].add(jnp.uint32(1), mode="drop")
+    return tuple(new_pools), wc_out
+
+
+def copy_blocks(cfg: ModelConfig, seal: Optional[CacheSeal], pools, wc,
+                src, dst, mask):
+    """Copy-on-write: duplicate blocks ``src -> dst`` (both (K,) int32,
+    ``mask`` (K,) bool gating padded rows).
+
+    Sealed pools re-key in flight: the payload is unsealed under (src
+    address, wc[src]) and re-sealed under (dst address, wc[dst] + 1) — a
+    fresh OTP for the copy, no plaintext ever lands in the pool. Returns
+    (pools, wc) with the destination counters bumped.
+    """
+    nb = wc.shape[0]
+    tgt = jnp.where(mask, dst, nb)                 # pads -> dropped
+    new_pools = []
+    for pj in pools:
+        wpb = pj["k"].shape[-1]
+        lid = pj["lid"]
+
+        def copy(pool_words, nonce):
+            blk = pool_words[:, src]               # (n, K, wpb)
+            if seal is not None:
+                blk = blk ^ KR.cache_block_otp(
+                    seal.key_words, nonce, src, wc[src], lid[:, None], wpb)
+                blk = blk ^ KR.cache_block_otp(
+                    seal.key_words, nonce, dst, wc[dst] + 1,
+                    lid[:, None], wpb)
+            return pool_words.at[:, tgt].set(blk, mode="drop")
+
+        new_pools.append({
+            "k": copy(pj["k"], seal.nonce_k if seal is not None else None),
+            "v": copy(pj["v"], seal.nonce_v if seal is not None else None),
+            "lid": lid,
+        })
+    return tuple(new_pools), wc.at[tgt].add(jnp.uint32(1), mode="drop")
 
 
 def apply_paged_updates(cfg: ModelConfig, seal: Optional[CacheSeal], pools,

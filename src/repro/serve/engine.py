@@ -1,14 +1,19 @@
 """Serving engines over the sealed substrate.
 
 ``ServeEngine`` is a **continuous-batching** scheduler: a fixed set of
-decode slots, per-slot admission and eviction at every step. New requests
-are admitted through a ragged bucketed prefill while other slots keep
-decoding, each slot samples with its own temperature/top-k/top-p settings
-and PRNG stream, and a finished slot's blocks are freed and refilled on the
-very next step — no slot ever idles waiting for a group to drain. The KV
-cache behind it is a paged block pool (``models/paged.py``) whose blocks
-are sealed with the same counter-mode keystream discipline as the weight
-tiles, so the HBM-resident cache image stays ciphertext end to end.
+decode slots, per-slot admission and eviction at every step. All hot-loop
+scheduler state (block tables, lengths, write counters, sampling state)
+lives device-resident in a ``SchedState`` pytree (``serve/step.py``)
+advanced by jitted transitions, so a decode tick is ONE dispatch with no
+per-step host array rebuilds, and the only device->host copy in steady
+state is the sampled token vector. Prompts prefill in fixed-size chunks
+interleaved with decode ticks (no decode stall on long prompts), and with
+``prefix_share=True`` identical prompt prefixes share sealed cache blocks
+copy-on-write: counter-mode sealing derives a block's OTP from its pool
+address + write counter, so N block tables can read the same ciphertext
+block with zero re-encryption, and a slot only pays a copy (re-keyed in
+flight, never plaintext in the pool) when it must append into a shared
+tail block.
 
 ``GroupServeEngine`` is the old group-drain loop (prefill a group, decode
 until every member finishes), kept as the benchmark baseline and as the
@@ -27,6 +32,7 @@ import numpy as np
 
 from repro.config import ModelConfig, SealConfig
 from repro.core import sealed_store as SS
+from repro.models import cache as MC
 from repro.models import transformer as T
 from repro.models.cache import paged_pool_init
 from repro.serve import sampling as SM
@@ -48,20 +54,33 @@ class Request:
     t_done: float = 0.0
 
 
+def _jit(fn, donate):
+    """jit with buffer donation: every transition rebinds the engine's
+    ``_state``/``_pools`` to the outputs, so the inputs are dead and XLA
+    can update the (large, pool-sized) buffers in place instead of
+    copying them per dispatch."""
+    return jax.jit(fn, donate_argnums=donate)
+
+
 class ServeEngine:
     """Continuous batcher over the paged, sealed KV cache.
 
-    Host-side it keeps the block allocator, the per-slot block tables /
-    lengths, and the write-counter mirror (bumped in lockstep with the
-    device's seal-on-write); device-side it runs one jitted decode step for
-    all slots plus one jitted admission prefill per prompt-length bucket.
+    Device-side: one jitted decode tick for all slots, one jitted chunked
+    prefill step, and scatter-style ``admit``/``evict``/``cow`` transitions
+    over the resident ``SchedState``. Host-side: the refcounted block
+    allocator, the prefix-sharing registry, the per-slot request
+    bookkeeping, and *debug mirrors* of the device state (``_tables`` /
+    ``_lengths`` / ``_wc`` / ``_counts`` — assertable via
+    ``check_device_mirror``, never read by the hot loop).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 256, seal: Optional[SealConfig] = None,
                  key_bytes: bytes = bytes(range(32)), block_size: int = 16,
                  seal_cache: Optional[bool] = None,
-                 admit_batch: Optional[int] = None, sample_seed: int = 0):
+                 admit_batch: Optional[int] = None, sample_seed: int = 0,
+                 prefix_share: bool = False,
+                 chunk_tokens: Optional[int] = None):
         assert cfg.frontend is None, "serving demo targets token archs"
         bad = [k for k in cfg.pattern if k not in ("attn", "local_attn")]
         if bad:
@@ -94,29 +113,33 @@ class ServeEngine:
             self._params_arg = params
 
         cache_seal = SS.cache_seal_config(key_bytes) if seal_cache else None
-        self._decode_fn = ST.make_paged_decode_step(cfg, _materialize,
-                                                    cache_seal)
-        self._prefill_fn = ST.make_paged_prefill(cfg, _materialize,
-                                                 cache_seal)
-        self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn)
+        self._decode_fn = ST.make_decode_tick(cfg, _materialize, cache_seal)
+        self._chunk_fn = ST.make_chunk_step(cfg, _materialize, cache_seal)
+        self._decode = _jit(self._decode_fn, (1, 2))
+        self._chunk = _jit(self._chunk_fn, (1, 2))
+        self._admit_t = _jit(ST.make_admit(), (0,))
+        self._evict_t = _jit(ST.make_evict(), (0,))
+        self._cow_t = _jit(ST.make_cow(cfg, cache_seal), (0, 1))
 
-        # host scheduler state
+        # device-resident scheduler state + host-side allocation
         s, mb = self.slots, self.max_len // block_size
         self.num_blocks = 1 + s * mb          # block 0 = scratch
         self._pools = paged_pool_init(cfg, self.num_blocks, block_size)
+        self._state = ST.sched_init(s, mb, self.num_blocks)
+        self._alloc = MC.BlockAllocator(self.num_blocks)
+        self.prefix_share = prefix_share
+        self._registry = (MC.PrefixRegistry(self._alloc, block_size)
+                          if prefix_share else None)
+        self.chunk_tokens = int(chunk_tokens or 2 * block_size)
+        self._active: List[Optional[Request]] = [None] * s
+        self._slot_blocks: List[List[int]] = [[] for _ in range(s)]
+        self._pending: List[Optional[np.ndarray]] = [None] * s
+        # host debug/assert mirrors of the device SchedState
         self._tables = np.zeros((s, mb), np.int32)
         self._lengths = np.zeros((s,), np.int32)
         self._wc = np.zeros((self.num_blocks,), np.uint32)
-        self._free = list(range(1, self.num_blocks))
-        self._active: List[Optional[Request]] = [None] * s
-        self._slot_blocks: List[List[int]] = [[] for _ in range(s)]
         self._last_tok = np.zeros((s,), np.int32)
         self._counts = np.zeros((s,), np.int32)
-        self._key_data = np.zeros((s, 2), np.uint32)
-        self._temp = np.zeros((s,), np.float32)
-        self._topk = np.zeros((s,), np.int32)
-        self._topp = np.ones((s,), np.float32)
         self._admit_n = min(admit_batch or max(1, batch_slots // 4),
                             batch_slots)
         self._sample_seed = sample_seed
@@ -131,7 +154,9 @@ class ServeEngine:
                 else sum(int(np.prod(x.shape)) * x.dtype.itemsize
                          for x in jax.tree.leaves(params)))
         self.stats = {
-            "prefills": 0, "decode_steps": 0, "tokens": 0,
+            "prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
+            "tokens": 0, "cow_copies": 0,
+            "shared_prefix_blocks": 0, "shared_prefix_tokens": 0,
             "fused_matmul_leaves": (len(self.sealed.fused_paths())
                                     if self.sealed else 0),
             "weights_plaintext_bytes_per_step": w_pt,
@@ -158,128 +183,195 @@ class ServeEngine:
         """True while any request is queued or holds a slot."""
         return bool(self.queue) or any(r is not None for r in self._active)
 
+    @property
+    def _free(self) -> List[int]:
+        """Free pool blocks (allocator view; kept as a property for tests
+        and introspection)."""
+        return self._alloc._free
+
     def step(self) -> List[Request]:
-        """Admit what fits, advance every active slot one token; returns
-        the requests that completed during this step."""
+        """Admit what fits, run one prefill chunk for admitted-but-pending
+        prompts, advance every decoding slot one token; returns the
+        requests that completed during this step."""
         n0 = len(self._done)
         self._admit()
-        if any(r is not None for r in self._active):
-            self._decode_step()
+        if any(p is not None for p in self._pending):
+            self._chunk_tick()
+        if any(r is not None and self._pending[i] is None
+               for i, r in enumerate(self._active)):
+            self._decode_tick()
         return self._done[n0:]
 
     def run(self) -> List[Request]:
         """Drain queue + in-flight work; returns the requests completed by
-        this call (admission order can overtake across buckets)."""
+        this call (admission order can overtake across chunk schedules)."""
         n0 = len(self._done)
         while self.busy:
-            before = (len(self.queue), self.stats["decode_steps"])
+            before = (len(self.queue), self.stats["decode_steps"],
+                      self.stats["prefills"])
             self.step()
-            after = (len(self.queue), self.stats["decode_steps"])
+            after = (len(self.queue), self.stats["decode_steps"],
+                     self.stats["prefills"])
             assert after != before, "scheduler made no progress"
         return self._done[n0:]
+
+    def check_device_mirror(self):
+        """Debug/assert view: the host mirrors must track the device
+        ``SchedState`` exactly (they are never read by the hot loop)."""
+        st = self._state
+        assert np.array_equal(np.asarray(st.tables), self._tables)
+        assert np.array_equal(np.asarray(st.lengths), self._lengths)
+        assert np.array_equal(np.asarray(st.wc), self._wc)
+        assert np.array_equal(np.asarray(st.counts), self._counts)
 
     # -------------------------------------------------- scheduling
 
     def _mt_eff(self, r: Request) -> int:
         return max(1, min(r.max_tokens, self.max_len - len(r.prompt)))
 
-    def _bucket(self, plen: int) -> int:
-        return -(-plen // self.block_size) * self.block_size
-
     def _admit(self):
-        bs = self.block_size
+        bs, mb = self.block_size, self.max_len // self.block_size
         while self.queue:
             free_slots = [i for i, r in enumerate(self._active) if r is None]
             if not free_slots:
                 return
-            bucket = self._bucket(len(self.queue[0].prompt))
-            picked: List[Request] = []
-            budget = len(self._free)
-            for r in self.queue:
-                if len(picked) >= min(self._admit_n, len(free_slots)):
+            width = min(self._admit_n, len(free_slots))
+            batch: List[tuple] = []
+            cow_pairs: List[tuple] = []
+            for r in list(self.queue):
+                if len(batch) >= width:
                     break
-                if self._bucket(len(r.prompt)) != bucket:
-                    break       # strict FIFO across buckets
-                need = -(-(len(r.prompt) + self._mt_eff(r)) // bs)
-                if need > budget:
-                    break
-                budget -= need
-                picked.append(r)
-            if not picked:
-                return
-            for r in picked:
+                plen = len(r.prompt)
+                if self._registry is not None:
+                    full, partial, n_shared = self._registry.match(r.prompt)
+                else:
+                    full, partial, n_shared = [], None, 0
+                # pin matched blocks before eviction can free them
+                held = list(full) + ([partial[0]] if partial else [])
+                self._alloc.incref(held)
+                need = -(-(plen + self._mt_eff(r)) // bs) - len(full)
+                if need > self._alloc.free_count and self._registry:
+                    self._registry.evict_lru(need)
+                priv = self._alloc.alloc(need)
+                if priv is None:
+                    self._alloc.decref(held)
+                    break               # strict FIFO: head of queue blocks
                 self.queue.remove(r)
-            self._prefill_batch(picked, bucket)
+                self._alloc.incref(full)   # the slot's own (durable) refs
+                slot = free_slots[len(batch)]
+                table = full + priv
+                self._active[slot] = r
+                self._slot_blocks[slot] = table
+                self._pending[slot] = np.asarray(r.prompt[n_shared:],
+                                                 np.int32)
+                self._tables[slot] = 0
+                self._tables[slot, :len(table)] = table
+                self._lengths[slot] = n_shared
+                self._counts[slot] = 0
+                self._last_tok[slot] = 0
+                if partial is not None:
+                    cow_pairs.append((partial[0], priv[0]))
+                    self.stats["cow_copies"] += 1
+                self.stats["shared_prefix_blocks"] += (
+                    len(full) + (1 if partial else 0))
+                self.stats["shared_prefix_tokens"] += n_shared
+                batch.append((slot, r, table, n_shared, held))
+            if not batch:
+                return
+            a = self._admit_n
+            sl = np.full((a,), self.slots, np.int32)
+            tb = np.zeros((a, mb), np.int32)
+            nsh = np.zeros((a,), np.int32)
+            kd = np.zeros((a, 2), np.uint32)
+            tp = np.zeros((a,), np.float32)
+            tk = np.zeros((a,), np.int32)
+            tpp = np.ones((a,), np.float32)
+            for i, (slot, r, table, n_shared, _) in enumerate(batch):
+                sl[i] = slot
+                tb[i, :len(table)] = table
+                nsh[i] = n_shared
+                kd[i] = np.asarray(SM.request_key_data(self._sample_seed,
+                                                       r.rid))
+                tp[i], tk[i], tpp[i] = r.temperature, r.top_k, r.top_p
+            self._state = self._admit_t(
+                self._state, jnp.asarray(sl), jnp.asarray(tb),
+                jnp.asarray(nsh), jnp.asarray(kd), jnp.asarray(tp),
+                jnp.asarray(tk), jnp.asarray(tpp))
+            if cow_pairs:
+                src = np.zeros((a,), np.int32)
+                dst = np.zeros((a,), np.int32)
+                msk = np.zeros((a,), bool)
+                for i, (s_b, d_b) in enumerate(cow_pairs):
+                    src[i], dst[i], msk[i] = s_b, d_b, True
+                    self._wc[d_b] += 1
+                self._pools, self._state = self._cow_t(
+                    self._pools, self._state, jnp.asarray(src),
+                    jnp.asarray(dst), jnp.asarray(msk))
+            for _, _, _, _, held in batch:
+                self._alloc.decref(held)   # slot refs live in _slot_blocks
 
-    def _prefill_batch(self, picked: List[Request], bucket: int):
-        bs, a = self.block_size, self._admit_n
-        nblk = bucket // bs
-        toks = np.zeros((a, bucket), np.int32)
-        true_len = np.ones((a,), np.int32)
-        block_tables = np.zeros((a, nblk), np.int32)
-        key_data = np.zeros((a, 2), np.uint32)
-        temp = np.zeros((a,), np.float32)
-        topk = np.zeros((a,), np.int32)
-        topp = np.ones((a,), np.float32)
-        rows: List[tuple] = []
-        for i, r in enumerate(picked):
-            slot = next(j for j, s in enumerate(self._active) if s is None)
-            self._active[slot] = r
-            plen = len(r.prompt)
-            need = -(-(plen + self._mt_eff(r)) // bs)
-            blocks = [self._free.pop() for _ in range(need)]
-            self._slot_blocks[slot] = blocks
-            self._tables[slot] = 0
-            self._tables[slot, :need] = blocks
-            toks[i, :plen] = r.prompt
-            true_len[i] = plen
-            block_tables[i] = blocks[:nblk]
-            key_data[i] = np.asarray(SM.request_key_data(self._sample_seed,
-                                                         r.rid))
-            temp[i], topk[i], topp[i] = r.temperature, r.top_k, r.top_p
-            self._wc[blocks[:nblk]] += 1       # sealed under the bumped wc
-            rows.append((i, slot, r))
-        self._wc[0] += 1                       # dummy rows write scratch
-        tok, _, pools = self._prefill(
-            self._params_arg, self._pools, jnp.asarray(toks),
-            jnp.asarray(true_len), jnp.asarray(block_tables),
-            jnp.asarray(self._wc), jnp.asarray(key_data), jnp.asarray(temp),
-            jnp.asarray(topk), jnp.asarray(topp))
-        self._pools = pools
+    def _chunk_tick(self):
+        """One chunked-prefill dispatch: up to admit-width pending slots
+        each advance ``chunk_tokens`` prompt tokens; rows reaching the end
+        of their prompt sample their first token and switch to decode."""
+        a, c, bs = self._admit_n, self.chunk_tokens, self.block_size
+        rows = [i for i, p in enumerate(self._pending) if p is not None][:a]
+        if not rows:
+            return
+        sl = np.full((a,), self.slots, np.int32)
+        toks = np.zeros((a, c), np.int32)
+        cl = np.zeros((a,), np.int32)
+        fin = np.zeros((a,), bool)
+        for i, slot in enumerate(rows):
+            pend = self._pending[slot]
+            n = min(len(pend), c)
+            sl[i] = slot
+            toks[i, :n] = pend[:n]
+            cl[i] = n
+            fin[i] = n == len(pend)
+        tok, self._state, self._pools = self._chunk(
+            self._params_arg, self._pools, self._state, jnp.asarray(sl),
+            jnp.asarray(toks), jnp.asarray(cl), jnp.asarray(fin))
         self.stats["prefills"] += 1
+        self.stats["prefill_chunks"] += len(rows)
         tok = np.asarray(tok)
-        for i, slot, r in rows:
-            self._lengths[slot] = len(r.prompt)
-            self._counts[slot] = 1
-            self._last_tok[slot] = tok[i]
-            self._key_data[slot] = np.asarray(
-                SM.request_key_data(self._sample_seed, r.rid))
-            self._temp[slot] = r.temperature
-            self._topk[slot] = r.top_k
-            self._topp[slot] = r.top_p
+        finished: List[int] = []
+        for i, slot in enumerate(rows):
+            n = int(cl[i])
+            r = self._active[slot]
+            length = int(self._lengths[slot])
+            for b in range(length // bs, (length + n - 1) // bs + 1):
+                self._wc[self._tables[slot, b]] += 1
+            self._lengths[slot] += n
+            if not fin[i]:
+                self._pending[slot] = self._pending[slot][n:]
+                continue
+            self._pending[slot] = None
+            if self._registry is not None:
+                self._registry.register(r.prompt, self._slot_blocks[slot])
             nt = int(tok[i])
+            self._counts[slot] = 1
+            self._last_tok[slot] = nt
             r.out.append(nt)
             self.stats["tokens"] += 1
             if len(r.out) >= self._mt_eff(r) or nt == r.eos:
-                self._finish(slot)
+                finished.append(slot)
+        if finished:
+            self._evict_slots(finished)
 
     def _decode_args(self):
-        """Current decode-step operands (also used by jaxpr-level tests)."""
-        return (self._params_arg, self._pools, jnp.asarray(self._tables),
-                jnp.asarray(self._lengths), jnp.asarray(self._wc),
-                jnp.asarray(self._last_tok[:, None]),
-                jnp.asarray(self._key_data), jnp.asarray(self._counts),
-                jnp.asarray(self._temp), jnp.asarray(self._topk),
-                jnp.asarray(self._topp))
+        """Current decode-tick operands (also used by jaxpr-level tests):
+        everything is already device-resident — params, pools, SchedState."""
+        return (self._params_arg, self._pools, self._state)
 
-    def _decode_step(self):
-        tok, _, pools = self._decode(*self._decode_args())
-        self._pools = pools
+    def _decode_tick(self):
+        tok, self._state, self._pools = self._decode(*self._decode_args())
         self.stats["decode_steps"] += 1
-        tok = np.asarray(tok)
+        tok = np.asarray(tok)                  # the ONLY d2h copy per tick
         bs = self.block_size
+        finished: List[int] = []
         for slot, r in enumerate(self._active):
-            if r is None:
+            if r is None or self._pending[slot] is not None:
                 continue
             # mirror the device's seal-on-write counter bump of the tail
             # block the new K/V token landed in
@@ -292,21 +384,30 @@ class ServeEngine:
             r.out.append(nt)
             self.stats["tokens"] += 1
             if len(r.out) >= self._mt_eff(r) or nt == r.eos:
-                self._finish(slot)
-        self._wc[0] += 1                       # inactive slots hit scratch
+                finished.append(slot)
+        if finished:
+            self._evict_slots(finished)
 
-    def _finish(self, slot: int):
-        r = self._active[slot]
-        r.done = True
-        r.t_done = time.time()
-        self._done.append(r)
-        self._free.extend(self._slot_blocks[slot])
-        self._slot_blocks[slot] = []
-        self._tables[slot] = 0
-        self._lengths[slot] = 0
-        self._counts[slot] = 0
-        self._last_tok[slot] = 0
-        self._active[slot] = None
+    def _evict_slots(self, slots: List[int]):
+        """Batched slot teardown: one device evict dispatch zeroes the
+        finished rows; the host drops block references (shared blocks
+        survive while the registry or another reader holds them)."""
+        ids = np.full((self.slots,), self.slots, np.int32)
+        ids[:len(slots)] = slots
+        self._state = self._evict_t(self._state, jnp.asarray(ids))
+        for slot in slots:
+            r = self._active[slot]
+            r.done = True
+            r.t_done = time.time()
+            self._done.append(r)
+            self._alloc.decref(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._tables[slot] = 0
+            self._lengths[slot] = 0
+            self._counts[slot] = 0
+            self._last_tok[slot] = 0
+            self._active[slot] = None
+            self._pending[slot] = None
 
 
 class GroupServeEngine:
@@ -353,12 +454,21 @@ class GroupServeEngine:
         self._prefill = jax.jit(self._prefill_fn)
         self._next_rid = 0
         self.queue: List[Request] = []
+        # same weights+KV split the continuous engine reports: the group
+        # engine's contiguous cache is never sealed, so its KV image is
+        # plaintext in full
+        kv_pt = (2 * cfg.n_superblocks() * len(cfg.pattern) * batch_slots
+                 * max_len * cfg.num_kv_heads * cfg.head_dim
+                 * jnp.dtype(cfg.dtype).itemsize)
+        w_pt = (self.sealed.plaintext_bytes_materialized() if self.sealed
+                else sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                         for x in jax.tree.leaves(params)))
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
                       "fused_matmul_leaves": (len(self.sealed.fused_paths())
                                               if self.sealed else 0),
-                      "plaintext_bytes_per_step": (
-                          self.sealed.plaintext_bytes_materialized()
-                          if self.sealed else 0)}
+                      "weights_plaintext_bytes_per_step": w_pt,
+                      "kv_plaintext_bytes_per_step": kv_pt,
+                      "plaintext_bytes_per_step": w_pt + kv_pt}
 
     def submit(self, prompt, max_tokens: int = 32, eos: int = -1) -> Request:
         r = Request(self._next_rid, np.asarray(prompt, np.int32), max_tokens,

@@ -38,9 +38,24 @@ def sample_logits(logits, keys, temperature, top_k, top_p):
     while the mass *before* it is < top_p, so the argmax always survives)
     are applied there, and the survivor set is sampled at ``logits /
     temperature``. Returns (B,) int32 tokens.
+
+    An all-greedy batch (every temperature <= 0) short-circuits to a pure
+    argmax under ``lax.cond`` — the vocab-wide argsort dominates the
+    sampling cost, and greedy decode (the common serving default) never
+    consults the sorted order.
     """
     b, v = logits.shape
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def full(_):
+        return _sample_full(logits, keys, temperature, top_k, top_p, greedy)
+
+    return jax.lax.cond(jnp.all(temperature <= 0),
+                        lambda _: greedy, full, operand=None)
+
+
+def _sample_full(logits, keys, temperature, top_k, top_p, greedy):
+    v = logits.shape[1]
     t = jnp.maximum(temperature, 1e-6)[:, None]
     sort_idx = jnp.argsort(-logits, axis=-1)                    # descending
     sorted_scaled = jnp.take_along_axis(logits / t, sort_idx, axis=-1)

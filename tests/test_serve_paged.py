@@ -152,3 +152,136 @@ def test_continuous_scheduler_staggered_arrivals():
     r = solo.submit(prompts[0], max_tokens=4)
     solo.run()
     assert r.out == handles[0].out
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill, prefix sharing, device-resident scheduler (PR 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sealed", [False, True])
+def test_chunked_prefill_matches_one_shot_exactly(sealed):
+    """A prompt prefilled in ragged fixed-width chunks produces the one-shot
+    ``prefill_logits`` output bit-for-bit: the dense paged view is
+    identity-indexed, so every chunk's keys land at view index == position —
+    the exact reduction layout of a contiguous prefill padded to the view
+    width."""
+    cfg = get_reduced("internlm2_1_8b").with_(dtype="float32")
+    params = T.init_params(cfg, jax.random.key(0))
+    rng = np.random.RandomState(3)
+    plen, b, mb = 11, 2, 5
+    nb = 1 + b * mb
+    toks = rng.randint(0, cfg.vocab_size, (b, plen)).astype(np.int32)
+    seal = SS.cache_seal_config(bytes(range(32))) if sealed else None
+
+    pools = MC.paged_pool_init(cfg, nb, BS)
+    tables = np.zeros((b, mb), np.int32)
+    for i in range(b):
+        tables[i] = 1 + i * mb + np.arange(mb)
+    wc = jnp.zeros((nb,), jnp.uint32)
+    lengths = jnp.zeros((b,), jnp.int32)
+    chunk_w, off, last = 5, 0, None
+    while off < plen:
+        n = min(chunk_w, plen - off)
+        chunk = np.zeros((b, chunk_w), np.int32)
+        chunk[:, :n] = toks[:, off:off + n]
+        cl = jnp.full((b,), n, jnp.int32)
+        last, ups = PG.chunk_logits(cfg, params, pools, jnp.asarray(tables),
+                                    lengths, wc, jnp.asarray(chunk), cl, seal)
+        pools, wc = PG.append_tokens(cfg, seal, pools, ups,
+                                     jnp.asarray(tables), lengths, cl, wc)
+        lengths = lengths + cl
+        off += n
+
+    pad = np.zeros((b, mb * BS), np.int32)
+    pad[:, :plen] = toks
+    ref, _ = PG.prefill_logits(cfg, params, jnp.asarray(pad),
+                               jnp.full((b,), plen, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(last), np.asarray(ref))
+
+
+@pytest.mark.parametrize("seal_cache", [False, True])
+def test_prefix_sharing_bit_identical_to_unshared(seal_cache):
+    """Requests sharing a prompt prefix (full blocks and a copy-on-write
+    partial tail block) emit the exact token streams of an unshared run,
+    on plaintext and sealed pools."""
+    cfg = get_reduced("internlm2_1_8b")
+    params = T.init_params(cfg, jax.random.key(1))
+    rng = np.random.RandomState(7)
+    base = rng.randint(0, cfg.vocab_size, 27)    # 1 full block + 11 tail
+    fork = np.concatenate([base[:20], rng.randint(0, cfg.vocab_size, 7)])
+
+    def run(prefix_share):
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, seal=None,
+                          seal_cache=seal_cache, sample_seed=5,
+                          prefix_share=prefix_share)
+        r0 = eng.submit(base.copy(), max_tokens=6)
+        for _ in range(3):
+            eng.step()        # donor registers its prefix before the others
+        r1 = eng.submit(base.copy(), max_tokens=6,
+                        temperature=0.7, top_k=8)
+        r2 = eng.submit(fork.copy(), max_tokens=5)
+        eng.run()
+        eng.check_device_mirror()
+        return eng, (r0.out, r1.out, r2.out)
+
+    eng_u, out_u = run(False)
+    eng_s, out_s = run(True)
+    assert out_u == out_s
+    assert eng_s.stats["cow_copies"] >= 1            # partial tail was COWed
+    assert eng_s.stats["shared_prefix_blocks"] >= 2
+    assert eng_s.stats["shared_prefix_tokens"] >= 26  # plen-1 for the clone
+    assert eng_u.stats["shared_prefix_blocks"] == 0
+
+
+def test_refcounted_blocks_freed_with_last_reader():
+    """Shared blocks return to the free list only when the last reader —
+    live slot or registry entry — drops them; registry-held blocks are
+    reclaimed by LRU eviction under pressure, not on request finish."""
+    cfg = get_reduced("internlm2_1_8b")
+    params = T.init_params(cfg, jax.random.key(1))
+    rng = np.random.RandomState(9)
+    base = rng.randint(0, cfg.vocab_size, 27)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, seal=None,
+                      seal_cache=False, prefix_share=True)
+    eng.submit(base.copy(), max_tokens=4)
+    eng.run()
+    # donor finished: its prompt blocks stay pinned by the registry
+    held = eng.num_blocks - 1 - len(eng._free)
+    assert held == 2                    # 1 full prefix block + partial tail
+    shared_block = eng._registry._full[next(iter(eng._registry._full))]
+    assert eng._alloc.refcount[shared_block] == 1   # registry is sole reader
+
+    eng.submit(base.copy(), max_tokens=4)
+    eng._admit()
+    assert eng._alloc.refcount[shared_block] == 2   # + the live slot
+    eng.run()
+    assert eng._alloc.refcount[shared_block] == 1   # back to registry-only
+    assert eng.num_blocks - 1 - len(eng._free) >= 2
+    # under pressure the registry lets LRU chains go
+    eng._registry.evict_lru(eng.num_blocks - 1)
+    assert len(eng._free) == eng.num_blocks - 1
+    eng.check_device_mirror()
+
+
+def test_decode_tick_is_host_free():
+    """Acceptance: with the scheduler state device-resident, a steady-state
+    decode tick performs NO host->device transfer — the sampled token vector
+    is the only traffic, and it goes the other way."""
+    cfg = get_reduced("internlm2_1_8b")
+    params = T.init_params(cfg, jax.random.key(2))
+    rng = np.random.RandomState(4)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, seal=None,
+                      seal_cache=True)
+    eng.submit(rng.randint(0, cfg.vocab_size, 9), max_tokens=24)
+    eng.submit(rng.randint(0, cfg.vocab_size, 13), max_tokens=24)
+    while any(p is not None for p in eng._pending) or eng.queue:
+        eng.step()                      # admission + chunked prefill
+    eng._decode_tick()                  # warm the decode graph
+    steps = eng.stats["decode_steps"]
+    with jax.transfer_guard_host_to_device("disallow"):
+        for _ in range(3):
+            eng._decode_tick()
+    assert eng.stats["decode_steps"] == steps + 3
+    eng.run()
+    eng.check_device_mirror()
