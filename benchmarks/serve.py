@@ -12,9 +12,13 @@ The headline comparison runs both engines plaintext so the delta is pure
 scheduling: group-drain burns decode steps on drained slots while the
 continuous batcher refills them. A third timed pass runs the continuous
 engine with the **sealed** paged KV cache to price the cache sealing, and
-its stats show ``kv_plaintext_bytes_per_step`` dropping to 0. A slots
-sweep (default 16/64/256, load scaled with the slot count) tracks the
-ROADMAP's throughput trajectory for the device-resident scheduler.
+its stats show ``kv_plaintext_bytes_per_step`` dropping to 0. A fourth
+pass (``continuous_sealed_verified``) arms the co-located Carter–Wegman
+MACs on top of the sealed cache — verified on every gather, re-minted on
+every append — and ``verify_overhead_x`` prices that integrity layer
+against the seal-only run. A slots sweep (default 16/64/256, load scaled
+with the slot count) tracks the ROADMAP's throughput trajectory for the
+device-resident scheduler.
 """
 import gc
 import json
@@ -66,6 +70,7 @@ def bench_engine(eng, prompts, kws, arrivals):
     compile_s = time.time() - t0                  # compile + first replay
     tok0, ds0, pf0 = (eng.stats["tokens"], eng.stats["decode_steps"],
                       eng.stats["prefills"])
+    mc0 = eng.stats.get("mac_checks", 0)
     t0 = time.time()
     reqs = drive(eng, prompts, arrivals, kws)
     _sync(eng)
@@ -86,8 +91,11 @@ def bench_engine(eng, prompts, kws, arrivals):
         "plaintext_bytes_per_step": int(eng.stats["plaintext_bytes_per_step"]),
         **{k: int(eng.stats[k]) for k in
            ("weights_plaintext_bytes_per_step", "kv_plaintext_bytes_per_step",
-            "prefill_chunks", "shared_prefix_blocks", "cow_copies")
+            "prefill_chunks", "shared_prefix_blocks", "cow_copies",
+            "mac_failures", "retries")
            if k in eng.stats},
+        **({"mac_checks": int(eng.stats["mac_checks"] - mc0)}
+           if getattr(eng, "verify", False) else {}),
     }
 
 
@@ -125,6 +133,11 @@ def serve_bench(arch: str = "internlm2_1_8b", requests: int = 48,
     rec_sealed = run_one(lambda: ServeEngine(
         cfg, params, batch_slots=slots, max_len=MAX_LEN, seal=None,
         seal_cache=True, sample_seed=seed, admit_batch=2))
+    # price the integrity layer: same sealed cache, per-block Carter-Wegman
+    # MACs verified at every gather and re-minted at every append
+    rec_verified = run_one(lambda: ServeEngine(
+        cfg, params, batch_slots=slots, max_len=MAX_LEN, seal=None,
+        seal_cache=True, sample_seed=seed, admit_batch=2, verify=True))
 
     # slots sweep: measure serving *capacity* — 3 requests per slot with
     # the Poisson arrival rate scaled to keep every point near saturation
@@ -145,6 +158,8 @@ def serve_bench(arch: str = "internlm2_1_8b", requests: int = 48,
         gc.collect()
 
     speedup = rec_cont["tokens_per_s"] / max(rec_grp["tokens_per_s"], 1e-9)
+    verify_overhead = (rec_sealed["tokens_per_s"]
+                       / max(rec_verified["tokens_per_s"], 1e-9))
     result = {
         "arch": arch, "slots": slots, "requests": requests, "seed": seed,
         "trace": {"arrival": "poisson", "mean_gap_steps": mean_gap,
@@ -153,9 +168,11 @@ def serve_bench(arch: str = "internlm2_1_8b", requests: int = 48,
         "continuous": rec_cont,
         "group_drain": rec_grp,
         "continuous_sealed_cache": rec_sealed,
+        "continuous_sealed_verified": rec_verified,
         "slots_sweep": sweep,
         "speedup_tokens_per_s": round(speedup, 2),
         "speedup_ok": bool(speedup >= 1.3),
+        "verify_overhead_x": round(verify_overhead, 3),
     }
     with open(out_path, "w") as f:
         json.dump(result, f, indent=1)
@@ -169,6 +186,10 @@ def main(sweep_slots=None):
     tag = "PASS" if res["speedup_ok"] else "FAIL"
     print(f"{tag}: continuous vs group-drain speedup "
           f"{res['speedup_tokens_per_s']}x (target >= 1.3x)")
+    print(f"integrity verification overhead: {res['verify_overhead_x']}x "
+          f"over the sealed cache "
+          f"({res['continuous_sealed_verified']['mac_checks']} MAC checks, "
+          f"{res['continuous_sealed_verified']['mac_failures']} failures)")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@ ColoE, 4. show the storage/traffic report, 5. decrypt-on-use inference that
 matches plaintext inference exactly, 6. the fused Pallas kernel,
 7. continuous-batching serving over the sealed paged KV cache,
 8. copy-on-write prefix sharing + chunked prefill on the device-resident
-scheduler.
+scheduler, 9. integrity: co-located MACs turn memory tampering (bit
+flips, replay, counter rollback, block relocation) into detected faults
+with per-request recovery.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -133,6 +135,42 @@ def main():
           f"cow_copies={eng2.stats['cow_copies']} "
           f"prefill_chunks={eng2.stats['prefill_chunks']}")
     print(f"  identical prompts, identical streams: {r0.out == r1.out}")
+
+    print("\n== 8. integrity: co-located MACs + tamper recovery ==")
+    # Threat model (GuardNN/Seculator-style, on top of the paper's
+    # confidentiality): the adversary has physical access to accelerator
+    # memory and can (a) flip ciphertext bits, (b) replay a stale
+    # (ciphertext, tag) image, (c) roll back a write counter — which would
+    # force the next re-seal to REUSE a one-time pad; XOR algebra then
+    # leaks plaintext, see core.security.attacks.otp_reuse_leak — or
+    # (d) relocate blocks wholesale, tags and all. Encryption detects none
+    # of these. verify=True arms a truncated Carter–Wegman MAC per sealed
+    # unit (weight line / weight tile / cache block), co-located with the
+    # counter metadata and bound to (ciphertext, address, write counter),
+    # checked in-graph at every unseal site. SE-plaintext rows are out of
+    # MAC scope by construction — the adversary already knows them.
+    # Detection is graceful: a cache MAC failure fails ONLY the owning
+    # request (re-prefilled once under fresh counters; other slots decode
+    # bit-identically through the recovery), a weight MAC failure is
+    # fail-stop. CLI: python -m repro.launch.serve --seal none \
+    #     --seal-cache on --verify --inject-tamper bitflip,replay --check
+    from repro.core.security.tamper import TamperInjector
+    inj = TamperInjector("bitflip", slot=0, start_step=3)
+    eng3 = ServeEngine(scfg, sparams, batch_slots=2, max_len=48, seal=None,
+                       seal_cache=True, verify=True, fault_hooks=(inj,))
+    reqs3 = [eng3.submit(rng.randint(0, scfg.vocab_size, 9 + 2 * i),
+                         max_tokens=6) for i in range(3)]
+    eng3.run()
+    ev = inj.events[0]
+    print(f"  injected: {ev.kind} at step {ev.step} (block {ev.block}, "
+          f"{ev.detail})")
+    print(f"  mac_checks={eng3.stats['mac_checks']} "
+          f"mac_failures={eng3.stats['mac_failures']} "
+          f"retries={eng3.stats['retries']}")
+    victim = next(r for r in reqs3 if r.retries > 0)
+    print(f"  req {victim.rid} was re-prefilled under fresh counters and "
+          f"completed: done={victim.done} error={victim.error} "
+          f"out={victim.out}")
     print("\nquickstart OK")
 
 

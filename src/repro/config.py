@@ -203,11 +203,15 @@ class SealConfig:
       paper's SE default is 0.5). Only meaningful when mode != none.
     cipher: "chacha20" (TPU-native production) | "aes128" (reference oracle)
     fuse_decrypt: beyond-paper — decrypt inside the consumer matmul kernel.
+    verify: beyond-paper — co-locate a truncated Carter–Wegman MAC with the
+      counter metadata of every sealed unit and check it at every unseal
+      site (GuardNN/Seculator-style integrity on top of confidentiality).
     """
     mode: str = "coloe"
     smart_ratio: float = 0.5
     cipher: str = "chacha20"
     fuse_decrypt: bool = True
+    verify: bool = False
     # layers always fully encrypted regardless of ratio (paper §3.4.1: first
     # two conv layers, last conv, last FC)
     protect_boundary_layers: bool = True

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import cipher as C
 from repro.core import coloe as CL
+from repro.core import mac as M
 
 
 def tensor_to_words(x) -> Tuple[jnp.ndarray, tuple, jnp.dtype]:
@@ -123,8 +124,30 @@ class EngineProtocol:
       decode time stay ciphertext in HBM and decrypt independently on the
       attention-gather read path. XOR is an involution, so one method both
       seals and unseals.
+    * ``line_macs`` / ``verify_lines`` — truncated Carter–Wegman tags over
+      the at-rest line records (``core.mac``): the hash covers the FULL
+      stored record — data words plus the co-located counter/flag word(s) —
+      so bit flips, counter tampering and flag (bypass-bit) flips are all
+      caught; the pad binds the line address plus a per-tensor tweak, so
+      lines cannot be swapped across addresses or tensors.
     """
     supports_fused = False
+
+    def line_record(self, s: SealedBuffer):
+        """The full at-rest record per line — the MAC message. ColoE already
+        packs counters+flags in-line; counter/direct append their separate
+        counter/flag word so it is covered too."""
+        if s.scheme == "coloe":
+            return s.payload
+        return jnp.concatenate(
+            [s.payload, jnp.asarray(s.counters, jnp.uint32)[:, None]], axis=1)
+
+    def line_macs(self, s: SealedBuffer, tweak=(0, 0, 0)):
+        return M.line_tags(self.mac_ctx, self.line_record(s), tweak)
+
+    def verify_lines(self, s: SealedBuffer, macs, tweak=(0, 0, 0)):
+        """(L,) bool — per-line tag match against the stored MACs."""
+        return self.line_macs(s, tweak) == jnp.asarray(macs, jnp.uint32)
 
     def seal_cache_blocks(self, words, nonce3, block_ids, write_counters,
                           layer_ids):
@@ -146,6 +169,7 @@ class DirectEngine(EngineProtocol):
     def __init__(self, key_bytes: bytes):
         self.round_keys = C.aes128_key_schedule(
             np.frombuffer(key_bytes[:16], np.uint8))
+        self.mac_ctx = M.mac_context(key_bytes, "weights")
 
     def encrypt(self, x, nonce2=(0, 0), enc_flags=None) -> SealedBuffer:
         words, shape, dt = tensor_to_words(x)
@@ -177,6 +201,7 @@ class _CtrBase(EngineProtocol):
 
     def __init__(self, key_bytes: bytes):
         self.key_words = jnp.asarray(C.key_to_words(key_bytes[:32]))
+        self.mac_ctx = M.mac_context(key_bytes, "weights")
 
     def _otp(self, n_lines, write_counters, nonce2):
         addrs = jnp.arange(n_lines, dtype=jnp.uint32)

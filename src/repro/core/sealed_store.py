@@ -31,6 +31,7 @@ import numpy as np
 from repro.config import SealConfig
 from repro.core import coloe as CL
 from repro.core import engine as E
+from repro.core import mac as M
 from repro.core import plan as P
 from repro.core.sealed_tensor import SealedTensor, SealMeta
 
@@ -75,6 +76,13 @@ def _nonce3(path: str) -> Tuple[int, int, int]:
                  for i in (8, 12, 16))
 
 
+def _line_tweak(path: str) -> Tuple[int, int, int]:
+    """Per-tensor MAC-pad tweak for line-layout leaves. Word 2 stays 0 while
+    every tile nonce word is forced odd, so line and tile tag domains can
+    never collide even across tensors."""
+    return _nonce2(path) + (0,)
+
+
 @dataclasses.dataclass(frozen=True)
 class CacheSeal:
     """Static sealing context for the paged KV cache: key words plus one
@@ -85,14 +93,20 @@ class CacheSeal:
     key_words: object                 # (8,) u32
     nonce_k: Tuple[int, int, int]
     nonce_v: Tuple[int, int, int]
+    # integrity: when set, every pool block carries a co-located MAC word
+    # per stream (``mac_k``/``mac_v``), written on every sealed write and
+    # checked on every gather/read (``models/paged.py``)
+    mac: Optional[M.MacContext] = None
 
 
-def cache_seal_config(key_bytes: bytes) -> CacheSeal:
+def cache_seal_config(key_bytes: bytes, verify: bool = False) -> CacheSeal:
     """Build the cache-block sealing context (same key as the weight store,
-    distinct nonce domain — "kvcache/" vs "tiles/")."""
+    distinct nonce domain — "kvcache/" vs "tiles/"). ``verify`` arms the
+    per-block Carter–Wegman MACs."""
     from repro.core import cipher as C
     return CacheSeal(jnp.asarray(C.key_to_words(key_bytes[:32])),
-                     _nonce3("kvcache/k"), _nonce3("kvcache/v"))
+                     _nonce3("kvcache/k"), _nonce3("kvcache/v"),
+                     M.mac_context(key_bytes, "kvcache") if verify else None)
 
 
 def line_flags_from_mask(mask_elems, dtype, n_lines: int) -> jnp.ndarray:
@@ -176,11 +190,15 @@ def _seal_lines(eng, seal, leaf, plan, path) -> SealedTensor:
                     dtype=str(jnp.dtype(leaf.dtype)),
                     nonce=tuple(int(v) for v in sealed.nonce2),
                     shape=tuple(leaf.shape), orig_len=sealed.orig_len)
+    # the MAC tweak is always the per-path nonce (the direct scheme's
+    # encryption nonce is (0, 0) for every leaf, which must not collapse the
+    # tag domains — a line swap across tensors has to be catchable)
+    macs = eng.line_macs(sealed, _line_tweak(path)) if seal.verify else None
     return SealedTensor(sealed.payload, sealed.counters, None, None, None,
-                        meta)
+                        meta, macs=macs)
 
 
-def _seal_tiles(eng, leaf, plan, path, geom) -> SealedTensor:
+def _seal_tiles(eng, seal, leaf, plan, path, geom) -> SealedTensor:
     nb, nk, n_out, k, n, bk, bn = geom
     nonce3 = _nonce3(path)
     shape = leaf.shape
@@ -197,16 +215,20 @@ def _seal_tiles(eng, leaf, plan, path, geom) -> SealedTensor:
         payload = jnp.stack(slices).reshape(shape)
         wc = jnp.arange(shape[0], dtype=jnp.uint32)
         key_c = jnp.broadcast_to(key_arr, (shape[0], 8))
+        ct2d = payload.reshape(shape[0], k, n)
     else:
         payload = eng.encrypt_tiles(leaf.reshape(k, n), nonce3, mask,
                                     0, bk, bn).reshape(shape)
         wc = jnp.zeros((), jnp.uint32)
         key_c = key_arr
+        ct2d = payload.reshape(k, n)
     meta = SealMeta(scheme=eng.name, layout="tiles",
                     dtype=str(jnp.dtype(leaf.dtype)), nonce=nonce3,
                     shape=tuple(shape), n_batch=nb, k_ndim=nk, n_out=n_out,
                     bk=bk, bn=bn)
-    return SealedTensor(payload, None, mask, key_c, wc, meta)
+    macs = (M.tile_tags(eng.mac_ctx, ct2d, mask, wc, bk, bn, tweak=nonce3)
+            if seal.verify else None)
+    return SealedTensor(payload, None, mask, key_c, wc, meta, macs=macs)
 
 
 def seal_params(params, seal: SealConfig, key_bytes: bytes) -> SealedParams:
@@ -221,7 +243,7 @@ def seal_params(params, seal: SealConfig, key_bytes: bytes) -> SealedParams:
         geom = tile_geometry(pt, leaf.shape, leaf.dtype, seal) \
             if eng.supports_fused else None
         if geom is not None:
-            tensors[path] = _seal_tiles(eng, leaf, plan, path, geom)
+            tensors[path] = _seal_tiles(eng, seal, leaf, plan, path, geom)
         else:
             tensors[path] = _seal_lines(eng, seal, leaf, plan, path)
     return SealedParams(tensors, plans, treedef, seal)
@@ -273,6 +295,42 @@ def fused_params(sp: SealedParams, key_bytes: bytes):
     flat = [sp.tensors[p] if sp.tensors[p].meta.layout == "tiles"
             else _unseal_tensor(eng, sp.tensors[p]) for p in sp.plans]
     return jax.tree_util.tree_unflatten(sp.treedef, flat)
+
+
+def verify_params(sp: SealedParams, key_bytes: bytes):
+    """In-graph integrity check of the whole sealed weight image.
+
+    Recomputes every stored tag from the at-rest ciphertext and reduces to
+    one scalar bool (True = intact). Constant-time: the reduction shape does
+    not depend on the data. Leaves sealed without MACs are skipped, so the
+    check is a no-op graph when ``seal.verify`` was off."""
+    eng = E.make_engine(sp.seal.mode, key_bytes)
+    oks = []
+    for path in sp.plans:
+        st = sp.tensors[path]
+        if st.macs is None:
+            continue
+        m = st.meta
+        if m.layout == "tiles":
+            nb = m.n_batch
+            k = int(np.prod(m.shape[nb:nb + m.k_ndim]))
+            n = int(np.prod(m.shape[nb + m.k_ndim:]))
+            ct2d = st.payload.reshape(((m.shape[0],) if nb else ()) + (k, n))
+            tags = M.tile_tags(eng.mac_ctx, ct2d, st.row_mask, st.wc,
+                               m.bk, m.bn, tweak=m.nonce)
+        else:
+            buf = E.SealedBuffer(m.scheme, st.payload, st.counters,
+                                 m.orig_len, m.shape, jnp.dtype(m.dtype),
+                                 m.nonce)
+            tags = eng.line_macs(buf, _line_tweak(path))
+        oks.append(jnp.all(tags == st.macs))
+    return jnp.all(jnp.stack(oks)) if oks else jnp.bool_(True)
+
+
+def n_macs(sp: SealedParams) -> int:
+    """Number of stored weight tags (for stats / overhead reporting)."""
+    return sum(int(t.macs.size) for t in sp.tensors.values()
+               if t.macs is not None)
 
 
 def sealed_byte_report(sp: SealedParams) -> Dict[str, float]:

@@ -64,28 +64,33 @@ class SealedTensor:
     row_mask:  (batch..., K) bool — SE row flags, "tiles" layout only
     key_words: (batch..., 8) u32 — cipher key, "tiles" layout only
     wc:        (batch...,) u32 — per-slice write counter, "tiles" only
+    macs:      u32 Carter–Wegman tags co-located with the counter metadata
+               (lines: (L,) per 128 B line; tiles: (batch..., K//bk, N//bn)
+               per tile). None when the store was sealed without integrity.
     """
 
-    __slots__ = ("payload", "counters", "row_mask", "key_words", "wc", "meta")
+    __slots__ = ("payload", "counters", "row_mask", "key_words", "wc", "meta",
+                 "macs")
 
     def __init__(self, payload, counters, row_mask, key_words, wc,
-                 meta: SealMeta):
+                 meta: SealMeta, macs=None):
         self.payload = payload
         self.counters = counters
         self.row_mask = row_mask
         self.key_words = key_words
         self.wc = wc
         self.meta = meta
+        self.macs = macs
 
     # ---- structure ----
 
     def tree_flatten(self):
         return ((self.payload, self.counters, self.row_mask, self.key_words,
-                 self.wc), self.meta)
+                 self.wc, self.macs), self.meta)
 
     @classmethod
     def tree_unflatten(cls, meta, children):
-        return cls(*children, meta=meta)
+        return cls(*children[:5], meta=meta, macs=children[5])
 
     def __repr__(self):
         p = getattr(self.payload, "shape", None)
@@ -118,19 +123,20 @@ class SealedTensor:
         return int(np.prod(self.meta.shape)) * jnp.dtype(self.meta.dtype).itemsize
 
     def stored_bytes(self) -> int:
-        """Bytes of the at-rest image (counters/flags included)."""
+        """Bytes of the at-rest image (counters/flags/MACs included)."""
+        mac_b = self.macs.size * 4 if self.macs is not None else 0
         if self.meta.layout == "tiles":
             b = self.payload.size * 4
             if self.row_mask is not None:
                 b += self.row_mask.size          # 1 B/row SE flag
             if self.wc is not None:
                 b += max(self.wc.size, 1) * 4    # write counters
-            return b
+            return b + mac_b
         n_lines = self.payload.shape[0]
         if self.meta.scheme == "coloe":
-            return n_lines * self.payload.shape[1] * 4   # counters in-line
+            return n_lines * self.payload.shape[1] * 4 + mac_b
         extra = n_lines * 8 if self.meta.scheme == "counter" else 0
-        return n_lines * 32 * 4 + extra
+        return n_lines * 32 * 4 + extra + mac_b
 
     def extra_streams(self) -> int:
         """Independent HBM streams a reader must fetch (1 = colocated).

@@ -148,6 +148,27 @@ def se_substitute_init(cfg: CNNConfig, victim_params, ratio: float,
 
 
 # --------------------------------------------------------------------------
+# counter-rollback / OTP-reuse attack primitive (ROADMAP item: keystream
+# reuse is catastrophic under XOR sealing)
+# --------------------------------------------------------------------------
+
+def otp_reuse_leak(ct_a, ct_b, known_pt_a):
+    """What a bus snooper recovers when two plaintexts were sealed under the
+    SAME (key, nonce, counter) OTP — e.g. after a counter rollback made a
+    re-seal reuse a keystream:
+
+        ct_a ^ ct_b = pt_a ^ pt_b, so knowing pt_a yields pt_b exactly.
+
+    Pure u32 XOR algebra; used by the tamper regression tests to show the
+    rollback fault is not hypothetical (the leak reconstructs the second
+    plaintext bit-for-bit) and must therefore be *detected* — the MAC pad's
+    write-counter binding catches the rollback in the same dispatch."""
+    ct_a = jnp.asarray(ct_a, jnp.uint32)
+    ct_b = jnp.asarray(ct_b, jnp.uint32)
+    return ct_a ^ ct_b ^ jnp.asarray(known_pt_a, jnp.uint32)
+
+
+# --------------------------------------------------------------------------
 # I-FGSM adversarial examples + transferability
 # --------------------------------------------------------------------------
 

@@ -5,6 +5,8 @@
 ``python -m repro.launch.serve --engine group --stagger 2 --check``
 ``python -m repro.launch.serve --prefix-share --chunked-prefill \
     --shared-prefix 32 --expect-shared --compare-sealed``
+``python -m repro.launch.serve --seal none --seal-cache on --verify \
+    --inject-tamper bitflip,replay,rollback,relocate --check``
 
 Arrivals are Poisson in *scheduler-step* units: request ``i`` is submitted
 once the engine has advanced ``arrival[i]`` steps, so the trace is
@@ -23,6 +25,7 @@ import numpy as np
 
 from repro.config import SealConfig
 from repro.configs import get_config, get_reduced
+from repro.core.security.tamper import TamperInjector
 from repro.models import transformer as T
 from repro.serve.engine import GroupServeEngine, ServeEngine
 
@@ -103,6 +106,17 @@ def main():
                          "bit-identical token streams (continuous only)")
     ap.add_argument("--expect-shared", action="store_true",
                     help="exit nonzero unless shared_prefix_blocks > 0")
+    ap.add_argument("--verify", action="store_true",
+                    help="arm the co-located Carter-Wegman MACs: check "
+                         "every sealed unit at every unseal site")
+    ap.add_argument("--inject-tamper", default="",
+                    help="comma-separated fault kinds (bitflip,replay,"
+                         "rollback,relocate) to inject against the sealed "
+                         "cache; exits nonzero unless every injected fault "
+                         "fired AND was detected (continuous only)")
+    ap.add_argument("--max-run-steps", type=int, default=0,
+                    help="abort the drain with StragglerTimeout after this "
+                         "many scheduler steps (0: unbounded)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless every request completed")
     args = ap.parse_args()
@@ -118,6 +132,17 @@ def main():
     max_len = args.shared_prefix + args.prompt_len + args.max_tokens + 8
     submit_kw = dict(max_tokens=args.max_tokens)
 
+    kinds = [k.strip() for k in args.inject_tamper.split(",") if k.strip()]
+    verify = args.verify or bool(kinds)     # injection implies verification
+    if kinds and engine != "continuous":
+        print("FAIL: --inject-tamper needs the continuous engine",
+              file=sys.stderr)
+        sys.exit(2)
+    # stagger the one-shot injectors so each fault lands on a live victim
+    # instead of piling onto the same scheduler step
+    injectors = [TamperInjector(k, slot=0, start_step=3 + 6 * i)
+                 for i, k in enumerate(kinds)]
+
     def build(seal_cache_override=None):
         if engine != "continuous":
             return GroupServeEngine(cfg, params, batch_slots=args.slots,
@@ -125,11 +150,17 @@ def main():
         seal_cache = {"auto": None, "on": True, "off": False}[args.seal_cache]
         if seal_cache_override is not None:
             seal_cache = seal_cache_override
+        if verify and seal is None and not seal_cache:
+            print("FAIL: --verify/--inject-tamper need sealed weights "
+                  "and/or a sealed cache", file=sys.stderr)
+            sys.exit(2)
         return ServeEngine(cfg, params, batch_slots=args.slots,
                            max_len=max_len, seal=seal, seal_cache=seal_cache,
                            sample_seed=args.seed,
                            prefix_share=args.prefix_share,
-                           chunk_tokens=args.chunk_tokens or None)
+                           chunk_tokens=args.chunk_tokens or None,
+                           verify=verify, fault_hooks=injectors,
+                           max_run_steps=args.max_run_steps or None)
 
     eng = build()
     if engine == "continuous":
@@ -155,6 +186,10 @@ def main():
                  f" shared_blocks={eng.stats['shared_prefix_blocks']}"
                  f" shared_tokens={eng.stats['shared_prefix_tokens']}"
                  f" cow={eng.stats['cow_copies']}")
+        if verify:
+            extra += (f" mac_checks={eng.stats['mac_checks']}"
+                      f" mac_failures={eng.stats['mac_failures']}"
+                      f" retries={eng.stats['retries']}")
     print(f"[{engine}] completed {n_done}/{len(reqs)} requests in {dt:.2f}s "
           f"— {eng.stats['tokens'] / max(dt, 1e-9):.1f} tok/s "
           f"(seal={args.seal}){extra} stats={eng.stats}")
@@ -168,6 +203,24 @@ def main():
     if args.expect_shared and eng.stats.get("shared_prefix_blocks", 0) <= 0:
         print("FAIL: no prefix blocks were shared", file=sys.stderr)
         ok = False
+    if injectors:
+        unfired = [i.kind for i in injectors if not i.fired]
+        if unfired:
+            print(f"FAIL: injectors never fired: {unfired}", file=sys.stderr)
+            ok = False
+        if eng.stats["mac_failures"] < sum(i.fired for i in injectors):
+            print(f"FAIL: {sum(i.fired for i in injectors)} faults injected "
+                  f"but only {eng.stats['mac_failures']} MAC failures "
+                  f"detected", file=sys.stderr)
+            ok = False
+        for inj in injectors:
+            for ev in inj.events:
+                print(f"  tamper[{ev.kind}] step={ev.step} slot={ev.slot} "
+                      f"block={ev.block} {ev.detail}")
+        victims = [r for r in reqs if r.retries > 0 or r.error]
+        print(f"  detected {eng.stats['mac_failures']} tampered dispatches; "
+              f"{eng.stats['retries']} re-prefills; victims="
+              f"{[r.rid for r in victims]}")
     if args.compare_sealed and engine == "continuous":
         other = build(seal_cache_override=not eng.seal_cache)
         reqs2 = drive(other, prompts, arrivals, submit_kw)

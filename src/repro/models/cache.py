@@ -165,9 +165,13 @@ def words_to_kv(words, dtype):
 
 def paged_pool_spec(cfg: ModelConfig, num_blocks: int, block_size: int):
     """ShapeDtypeStructs of the paged pools: a tuple over pattern positions
-    of {"k", "v": (n_super, num_blocks, words_per_block) u32, "lid":
-    (n_super,) u32}. ``lid`` is the globally unique layer id folded into the
-    block keystream (nonce word 0)."""
+    of {"k", "v": (n_super, num_blocks, words_per_block) u32, "mac_k",
+    "mac_v": (n_super, num_blocks) u32, "lid": (n_super,) u32}. ``lid`` is
+    the globally unique layer id folded into the block keystream (nonce
+    word 0). ``mac_k``/``mac_v`` are the co-located per-block Carter–Wegman
+    tags (one word per stream — 0.1% of a block); they are always allocated
+    so the pool pytree structure is seal-agnostic, and stay zero unless the
+    cache seal carries a MAC context."""
     n = cfg.n_superblocks()
     wpb = block_size * kv_words_per_token(cfg)
     out = []
@@ -177,6 +181,8 @@ def paged_pool_spec(cfg: ModelConfig, num_blocks: int, block_size: int):
         out.append({
             "k": jax.ShapeDtypeStruct((n, num_blocks, wpb), jnp.uint32),
             "v": jax.ShapeDtypeStruct((n, num_blocks, wpb), jnp.uint32),
+            "mac_k": jax.ShapeDtypeStruct((n, num_blocks), jnp.uint32),
+            "mac_v": jax.ShapeDtypeStruct((n, num_blocks), jnp.uint32),
             "lid": jax.ShapeDtypeStruct((n,), jnp.uint32),
         })
     return tuple(out)
@@ -254,6 +260,7 @@ class PrefixRegistry:
         self.bs = block_size
         self._full = {}       # chain_key -> block id
         self._partial = {}    # chain_key of parent -> (block id, token tuple)
+        self._parent = {}     # chain_key -> parent chain_key (purge cascade)
         self._lru = {}        # chain_key -> last-use tick (full entries)
         self._tick = 0
         self.hits = 0         # blocks served from the registry
@@ -310,6 +317,7 @@ class PrefixRegistry:
             if k not in self._full:
                 self._full[k] = blocks[i]
                 self.alloc.incref([blocks[i]])
+                self._parent[k] = key
             key = k
             self._lru[key] = self._tick
         tail = tuple(int(t) for t in prompt[(plen // bs) * bs:])
@@ -317,6 +325,34 @@ class PrefixRegistry:
             b = blocks[plen // bs]
             self._partial[key] = (b, tail)
             self.alloc.incref([b])
+
+    def purge_blocks(self, blocks) -> int:
+        """Forget every chain that touches ``blocks`` (untrusted content —
+        e.g. a failed integrity check) plus all descendant chains: a chain
+        hash commits to the *token* contents of blocks [0, i], so any chain
+        running through a purged block would keep serving the pre-tamper
+        tokens to future matches. Drops the registry's references; returns
+        the number of blocks actually freed."""
+        bad = {int(b) for b in blocks}
+        dead = {k for k, b in self._full.items() if b in bad}
+        # cascade down the parent links until closed
+        changed = True
+        while changed:
+            changed = False
+            for k, parent in self._parent.items():
+                if parent in dead and k in self._full and k not in dead:
+                    dead.add(k)
+                    changed = True
+        release = []
+        for k in dead:
+            release.append(self._full.pop(k))
+            self._lru.pop(k, None)
+            self._parent.pop(k, None)
+        for k in list(self._partial):
+            b, _ = self._partial[k]
+            if b in bad or k in dead:
+                release.append(self._partial.pop(k)[0])
+        return len(self.alloc.decref(release))
 
     def evict_lru(self, need_free: int) -> int:
         """Release LRU chains until the allocator has ``need_free`` free
@@ -354,6 +390,8 @@ def paged_pool_init(cfg: ModelConfig, num_blocks: int, block_size: int):
         out.append({
             "k": jnp.zeros(sj["k"].shape, jnp.uint32),
             "v": jnp.zeros(sj["v"].shape, jnp.uint32),
+            "mac_k": jnp.zeros(sj["mac_k"].shape, jnp.uint32),
+            "mac_v": jnp.zeros(sj["mac_v"].shape, jnp.uint32),
             "lid": jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(npat)
                    + jnp.uint32(j),
         })

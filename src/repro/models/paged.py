@@ -49,8 +49,15 @@ def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
 
     pool_j: one super-block slice {"k","v": (NB, wpb) u32, "lid": ()}.
     tables: (B, MB) int32 pool block ids; lengths: (B,) int32; wc: (NB,) u32.
-    Returns k/v (B, L, kv_heads, head_dim) with L = MB * block_size and
-    pos (B, L) int32 (INVALID_POS beyond each slot's length).
+    Returns ({"k","v","pos"}, ok): k/v (B, L, kv_heads, head_dim) with
+    L = MB * block_size, pos (B, L) int32 (INVALID_POS beyond each slot's
+    length), and ok (B,) bool — per-slot integrity verdict. When the seal
+    carries a MAC context, every *resident* gathered block (table entries
+    covering positions < length; uninitialized tail blocks are skipped) has
+    its Carter–Wegman tag recomputed over the gathered CIPHERTEXT — before
+    the unseal XOR, so the check authenticates exactly the HBM image — and
+    compared against the co-located ``mac_k``/``mac_v`` words. ok is all-True
+    when verification is off.
 
     pos_len (B,) optionally extends the *position* validity past ``lengths``
     for the chunked-prefill path, which splices the chunk's fresh K/V into
@@ -60,11 +67,23 @@ def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
     b, mb = tables.shape
     wpb = pool_j["k"].shape[-1]
     wpt = MC.kv_words_per_token(cfg)
-    seq = mb * (wpb // wpt)
+    bs = wpb // wpt
+    seq = mb * bs
     kw = pool_j["k"][tables]                       # (B, MB, wpb)
     vw = pool_j["v"][tables]
+    ok = jnp.ones((b,), bool)
     if seal is not None:
         wcb = wc[tables]
+        if seal.mac is not None:
+            tk = seal.mac.tags(kw, tables, wcb, pool_j["lid"],
+                               tweak=seal.nonce_k)
+            tv = seal.mac.tags(vw, tables, wcb, pool_j["lid"],
+                               tweak=seal.nonce_v)
+            resident = (jnp.arange(mb, dtype=jnp.int32)[None, :]
+                        < ((lengths + bs - 1) // bs)[:, None])    # (B, MB)
+            okb = ((tk == pool_j["mac_k"][tables])
+                   & (tv == pool_j["mac_v"][tables]))
+            ok = jnp.all((~resident) | okb, axis=1)
         kw = kw ^ KR.cache_block_otp(seal.key_words, seal.nonce_k, tables,
                                      wcb, pool_j["lid"], wpb)
         vw = vw ^ KR.cache_block_otp(seal.key_words, seal.nonce_v, tables,
@@ -78,7 +97,7 @@ def _dense_view(cfg: ModelConfig, seal: Optional[CacheSeal], pool_j,
     v = jnp.where(valid[..., None, None], v, 0)
     vpos = valid if pos_len is None else pos < pos_len[:, None]
     pos = jnp.where(vpos, pos, MC.INVALID_POS)
-    return {"k": k, "v": v, "pos": pos}
+    return {"k": k, "v": v, "pos": pos}, ok
 
 
 def decode_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
@@ -87,25 +106,29 @@ def decode_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
 
     tokens: (B, 1) int32 (garbage for inactive slots — masked by lengths).
     Returns (logits (B, V) f32, updates: per-position {"k_new","v_new"}
-    stacked (n_super, B, 1, kv_heads, head_dim)).
+    stacked (n_super, B, 1, kv_heads, head_dim), ok (B,) bool — the AND of
+    every layer's cache-read integrity verdict; all-True unless the seal
+    carries a MAC context).
     """
     x = T._embed(cfg, params, {"tokens": tokens})
     positions = lengths[:, None].astype(jnp.int32)          # (B, 1)
 
     def body(h, xs):
         p_slices, pool_slices = xs
-        ups = []
+        ups, oks = [], []
         for j, kind in enumerate(cfg.pattern):
-            view = _dense_view(cfg, seal, pool_slices[j], tables, lengths, wc)
+            view, okj = _dense_view(cfg, seal, pool_slices[j], tables,
+                                    lengths, wc)
             h, up, _ = B.block_apply(cfg, kind, p_slices[j], h, positions,
                                      "decode", view)
             ups.append(up)
-        return h, tuple(ups)
+            oks.append(okj)
+        return h, (tuple(ups), jnp.all(jnp.stack(oks), axis=0))
 
-    x, updates = lax.scan(body, x, (params["blocks"], pools))
+    x, (updates, oks) = lax.scan(body, x, (params["blocks"], pools))
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = T._unembed(cfg, params, x)[:, 0]
-    return logits, updates
+    return logits, updates, jnp.all(oks, axis=0)
 
 
 def chunk_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
@@ -120,7 +143,8 @@ def chunk_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
     the one-shot ``prefill_logits`` bit-for-bit (given matching view
     widths). Returns (logits (B, V) at each row's last chunk token,
     updates: per layer {"k_new","v_new"} stacked (n, B, C, kv_heads, hd)
-    for ``append_tokens`` to seal into the pools).
+    for ``append_tokens`` to seal into the pools, ok (B,) bool — per-slot
+    cache-read integrity verdict across all layers).
     """
     x = T._embed(cfg, params, {"tokens": tokens})
     c = tokens.shape[1]
@@ -129,23 +153,24 @@ def chunk_logits(cfg: ModelConfig, params, pools, tables, lengths, wc,
 
     def body(h, xs):
         p_slices, pool_slices = xs
-        ups = []
+        ups, oks = [], []
         for j, kind in enumerate(cfg.pattern):
-            view = _dense_view(cfg, seal, pool_slices[j], tables, lengths,
-                               wc, pos_len=lengths + chunk_len)
+            view, okj = _dense_view(cfg, seal, pool_slices[j], tables,
+                                    lengths, wc, pos_len=lengths + chunk_len)
             view["cl"] = chunk_len
             h, up, _ = B.block_apply(cfg, kind, p_slices[j], h, positions,
                                      "chunk", view)
             ups.append(up)
-        return h, tuple(ups)
+            oks.append(okj)
+        return h, (tuple(ups), jnp.all(jnp.stack(oks), axis=0))
 
-    x, updates = lax.scan(body, x, (params["blocks"], pools))
+    x, (updates, oks) = lax.scan(body, x, (params["blocks"], pools))
     x = L.apply_norm(cfg, params["final_norm"], x)
     idx = jnp.maximum(chunk_len - 1, 0)[:, None, None]
     last = jnp.take_along_axis(
         x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[-1])), axis=1)
     logits = T._unembed(cfg, params, last)[:, 0]
-    return logits, updates
+    return logits, updates, jnp.all(oks, axis=0)
 
 
 def append_tokens(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
@@ -189,7 +214,7 @@ def append_tokens(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
                & (tok_of_w[None, :] < (o + counts)[:, None]))    # (B, w2)
         roll = (widx[None, :] - (o * wpt)[:, None]) % w2         # (B, w2)
 
-        def splice(pool_words, x_new, nonce):
+        def splice(pool_words, mac_words, x_new, nonce):
             tw = MC.kv_to_words(x_new.reshape(n, b, c, -1))      # (n,B,C,wpt)
             base = jnp.concatenate(
                 [tw.reshape(n, b, c * wpt),
@@ -210,15 +235,20 @@ def append_tokens(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
             out = out.reshape(n, b, nspan, wpb)
             out = jnp.where(touched[None, :, :, None], out, blk)
             tgt = jnp.where(touched, pb, nb)       # untouched -> dropped
-            return pool_words.at[:, tgt].set(out, mode="drop")
+            if seal is not None and seal.mac is not None:
+                # re-MAC the rewritten image under the bumped counter —
+                # tags of untouched rows land on dropped indices
+                tags = seal.mac.tags(out, pb, wc[pb] + 1,
+                                     lid[:, None, None], tweak=nonce)
+                mac_words = mac_words.at[:, tgt].set(tags, mode="drop")
+            return pool_words.at[:, tgt].set(out, mode="drop"), mac_words
 
-        new_pools.append({
-            "k": splice(pj["k"], uj["k_new"],
-                        seal.nonce_k if seal is not None else None),
-            "v": splice(pj["v"], uj["v_new"],
-                        seal.nonce_v if seal is not None else None),
-            "lid": lid,
-        })
+        nk, nmk = splice(pj["k"], pj["mac_k"], uj["k_new"],
+                         seal.nonce_k if seal is not None else None)
+        nv, nmv = splice(pj["v"], pj["mac_v"], uj["v_new"],
+                         seal.nonce_v if seal is not None else None)
+        new_pools.append({"k": nk, "v": nv, "mac_k": nmk, "mac_v": nmv,
+                          "lid": lid})
         if j == 0:
             tgt = jnp.where(touched, pb, nb)
             wc_out = wc.at[tgt].add(jnp.uint32(1), mode="drop")
@@ -233,31 +263,49 @@ def copy_blocks(cfg: ModelConfig, seal: Optional[CacheSeal], pools, wc,
     Sealed pools re-key in flight: the payload is unsealed under (src
     address, wc[src]) and re-sealed under (dst address, wc[dst] + 1) — a
     fresh OTP for the copy, no plaintext ever lands in the pool. Returns
-    (pools, wc) with the destination counters bumped.
+    (pools, wc, ok) with the destination counters bumped; ok is a scalar
+    bool — when the seal carries a MAC context, every masked source block
+    is verified against its stored tag *before* the re-key (a COW must not
+    launder a tampered block into a freshly-MACed copy) and the copy gets
+    its own tag under the destination (address, counter).
     """
     nb = wc.shape[0]
     tgt = jnp.where(mask, dst, nb)                 # pads -> dropped
     new_pools = []
+    oks = []
     for pj in pools:
         wpb = pj["k"].shape[-1]
         lid = pj["lid"]
 
-        def copy(pool_words, nonce):
+        def copy(pool_words, mac_words, nonce):
             blk = pool_words[:, src]               # (n, K, wpb)
+            ok = jnp.bool_(True)
             if seal is not None:
+                if seal.mac is not None:
+                    ts = seal.mac.tags(blk, src, wc[src], lid[:, None],
+                                       tweak=nonce)
+                    ok = jnp.all(~mask[None, :]
+                                 | (ts == mac_words[:, src]))
                 blk = blk ^ KR.cache_block_otp(
                     seal.key_words, nonce, src, wc[src], lid[:, None], wpb)
                 blk = blk ^ KR.cache_block_otp(
                     seal.key_words, nonce, dst, wc[dst] + 1,
                     lid[:, None], wpb)
-            return pool_words.at[:, tgt].set(blk, mode="drop")
+                if seal.mac is not None:
+                    td = seal.mac.tags(blk, dst, wc[dst] + 1, lid[:, None],
+                                       tweak=nonce)
+                    mac_words = mac_words.at[:, tgt].set(td, mode="drop")
+            return pool_words.at[:, tgt].set(blk, mode="drop"), mac_words, ok
 
-        new_pools.append({
-            "k": copy(pj["k"], seal.nonce_k if seal is not None else None),
-            "v": copy(pj["v"], seal.nonce_v if seal is not None else None),
-            "lid": lid,
-        })
-    return tuple(new_pools), wc.at[tgt].add(jnp.uint32(1), mode="drop")
+        nk, nmk, ok_k = copy(pj["k"], pj["mac_k"],
+                             seal.nonce_k if seal is not None else None)
+        nv, nmv, ok_v = copy(pj["v"], pj["mac_v"],
+                             seal.nonce_v if seal is not None else None)
+        new_pools.append({"k": nk, "v": nv, "mac_k": nmk, "mac_v": nmv,
+                          "lid": lid})
+        oks.append(ok_k & ok_v)
+    return (tuple(new_pools), wc.at[tgt].add(jnp.uint32(1), mode="drop"),
+            jnp.all(jnp.stack(oks)))
 
 
 def apply_paged_updates(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
@@ -282,7 +330,7 @@ def apply_paged_updates(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
         lid = pj["lid"]                                        # (n,)
         n = lid.shape[0]
 
-        def append(pool_words, x_new, nonce):
+        def append(pool_words, mac_words, x_new, nonce):
             tw = MC.kv_to_words(x_new[:, :, 0].reshape(n, b, -1))  # (n,B,wpt)
             blk = pool_words[:, pb]                                # (n,B,wpb)
             if seal is not None:
@@ -298,15 +346,18 @@ def apply_paged_updates(cfg: ModelConfig, seal: Optional[CacheSeal], pools,
             if seal is not None:
                 blk = blk ^ KR.cache_block_otp(
                     seal.key_words, nonce, pb, wc[pb] + 1, lid[:, None], wpb)
-            return pool_words.at[:, pb].set(blk)
+                if seal.mac is not None:
+                    tags = seal.mac.tags(blk, pb, wc[pb] + 1, lid[:, None],
+                                         tweak=nonce)
+                    mac_words = mac_words.at[:, pb].set(tags)
+            return pool_words.at[:, pb].set(blk), mac_words
 
-        new_pools.append({
-            "k": append(pj["k"], uj["k_new"],
-                        seal.nonce_k if seal is not None else None),
-            "v": append(pj["v"], uj["v_new"],
-                        seal.nonce_v if seal is not None else None),
-            "lid": lid,
-        })
+        nk, nmk = append(pj["k"], pj["mac_k"], uj["k_new"],
+                         seal.nonce_k if seal is not None else None)
+        nv, nmv = append(pj["v"], pj["mac_v"], uj["v_new"],
+                         seal.nonce_v if seal is not None else None)
+        new_pools.append({"k": nk, "v": nv, "mac_k": nmk, "mac_v": nmv,
+                          "lid": lid})
     return tuple(new_pools)
 
 
@@ -347,20 +398,24 @@ def prefill_write(cfg: ModelConfig, seal: Optional[CacheSeal], pools, cache,
         n, sb = cj["k"].shape[0], cj["k"].shape[2]
         assert sb * wpt == nblk * wpb, (sb, wpt, nblk, wpb)
 
-        def write(pool_words, kv, nonce):
+        def write(pool_words, mac_words, kv, nonce):
             w = MC.kv_to_words(kv.reshape(n, a, sb, -1))   # (n, A, Sb, wpt)
             w = w.reshape(n, a, nblk, wpb)
             if seal is not None:
                 w = w ^ KR.cache_block_otp(
                     seal.key_words, nonce, block_tables, wc[block_tables],
                     pj["lid"][:, None, None], wpb)
-            return pool_words.at[:, block_tables].set(w)
+                if seal.mac is not None:
+                    tags = seal.mac.tags(w, block_tables, wc[block_tables],
+                                         pj["lid"][:, None, None],
+                                         tweak=nonce)
+                    mac_words = mac_words.at[:, block_tables].set(tags)
+            return pool_words.at[:, block_tables].set(w), mac_words
 
-        new_pools.append({
-            "k": write(pj["k"], cj["k"],
-                       seal.nonce_k if seal is not None else None),
-            "v": write(pj["v"], cj["v"],
-                       seal.nonce_v if seal is not None else None),
-            "lid": pj["lid"],
-        })
+        nk, nmk = write(pj["k"], pj["mac_k"], cj["k"],
+                        seal.nonce_k if seal is not None else None)
+        nv, nmv = write(pj["v"], pj["mac_v"], cj["v"],
+                        seal.nonce_v if seal is not None else None)
+        new_pools.append({"k": nk, "v": nv, "mac_k": nmk, "mac_v": nmv,
+                          "lid": pj["lid"]})
     return tuple(new_pools)

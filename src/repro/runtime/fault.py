@@ -13,11 +13,16 @@ Components (all host-side, framework-agnostic to the jit'd step):
   transient errors (preemption notices, flaky storage).
 * ``PreemptionGuard`` — SIGTERM handler: flips a flag the train loop polls
   to checkpoint-and-exit cleanly inside the grace period.
+* ``FaultInjectionHook`` — interface for deterministic fault injectors the
+  serve engine calls once per scheduler step (``core.security.tamper``
+  implements the memory-tampering faults).
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
+import random
 import signal
 import threading
 import time
@@ -66,9 +71,12 @@ class Heartbeat:
         if self._thread:
             self._thread.join(timeout=2.0)
 
-    def alive_hosts(self) -> Dict[str, dict]:
+    def _scan(self):
+        """Yield (host, record, age) for every parseable heartbeat file.
+        A record without a ``time`` field (torn write from a pre-atomic
+        writer) counts as infinitely stale rather than crashing the scan;
+        the host name falls back to the filename."""
         now = time.time()
-        out = {}
         for f in os.listdir(self.dir):
             if not f.startswith("hb_") or f.endswith(".tmp"):
                 continue
@@ -77,24 +85,17 @@ class Heartbeat:
                     rec = json.load(fh)
             except (json.JSONDecodeError, OSError):
                 continue
-            if now - rec["time"] <= self.timeout:
-                out[rec["host"]] = rec
-        return out
+            host = rec.get("host") or f[3:-5]
+            age = (now - rec["time"]) if "time" in rec else float("inf")
+            yield host, rec, age
+
+    def alive_hosts(self) -> Dict[str, dict]:
+        return {h: rec for h, rec, age in self._scan()
+                if age <= self.timeout}
 
     def dead_hosts(self) -> Dict[str, dict]:
-        now = time.time()
-        out = {}
-        for f in os.listdir(self.dir):
-            if not f.startswith("hb_") or f.endswith(".tmp"):
-                continue
-            try:
-                with open(os.path.join(self.dir, f)) as fh:
-                    rec = json.load(fh)
-            except (json.JSONDecodeError, OSError):
-                continue
-            if now - rec["time"] > self.timeout:
-                out[rec["host"]] = rec
-        return out
+        return {h: rec for h, rec, age in self._scan()
+                if age > self.timeout}
 
 
 class StepWatchdog:
@@ -129,8 +130,16 @@ class StepWatchdog:
 
 
 def retry(n: int = 3, backoff: float = 0.5,
-          exceptions=(IOError, OSError)) -> Callable:
+          exceptions=(IOError, OSError), jitter: float = 0.0) -> Callable:
+    """Bounded-retry decorator: up to ``n`` attempts with exponential
+    backoff (optionally jittered by up to ``jitter`` fraction of the delay,
+    de-synchronizing retry storms across hosts). ``n <= 0`` is rejected at
+    decoration time — the old behavior silently returned None without ever
+    calling the function."""
+    if n <= 0:
+        raise ValueError(f"retry needs at least one attempt, got n={n}")
     def deco(fn):
+        @functools.wraps(fn)
         def wrapped(*a, **kw):
             delay = backoff
             for i in range(n):
@@ -139,11 +148,21 @@ def retry(n: int = 3, backoff: float = 0.5,
                 except exceptions:
                     if i == n - 1:
                         raise
-                    time.sleep(delay)
+                    time.sleep(delay * (1.0 + jitter * random.random()))
                     delay *= 2
-        wrapped.__name__ = fn.__name__
         return wrapped
     return deco
+
+
+class FaultInjectionHook:
+    """Interface for deterministic fault injectors: the serve engine calls
+    ``on_step(engine)`` at the top of every scheduler step, before any
+    dispatch — the hook may mutate pools / device state / counters to model
+    an adversary with physical access to the accelerator's memory
+    (``core.security.tamper.TamperInjector``)."""
+
+    def on_step(self, engine) -> None:      # pragma: no cover - interface
+        raise NotImplementedError
 
 
 class PreemptionGuard:

@@ -32,9 +32,11 @@ import numpy as np
 
 from repro.config import ModelConfig, SealConfig
 from repro.core import sealed_store as SS
+from repro.core.mac import SealedIntegrityError
 from repro.models import cache as MC
 from repro.models import transformer as T
 from repro.models.cache import paged_pool_init
+from repro.runtime.fault import StragglerTimeout
 from repro.serve import sampling as SM
 from repro.serve import step as ST
 
@@ -52,6 +54,9 @@ class Request:
     done: bool = False
     t_submit: float = 0.0
     t_done: float = 0.0
+    retries: int = 0                  # integrity-failure re-prefills so far
+    error: Optional[str] = None       # "integrity" once the retry budget is
+                                      # exhausted; None on clean completion
 
 
 def _jit(fn, donate):
@@ -80,7 +85,9 @@ class ServeEngine:
                  seal_cache: Optional[bool] = None,
                  admit_batch: Optional[int] = None, sample_seed: int = 0,
                  prefix_share: bool = False,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 verify: bool = False, watchdog=None,
+                 max_run_steps: Optional[int] = None, fault_hooks=()):
         assert cfg.frontend is None, "serving demo targets token archs"
         bad = [k for k in cfg.pattern if k not in ("attn", "local_attn")]
         if bad:
@@ -91,11 +98,20 @@ class ServeEngine:
         self.slots = batch_slots
         self.block_size = block_size
         self.max_len = -(-max_len // block_size) * block_size
-        self.seal = seal
         weights_sealed = seal is not None and seal.mode != "none"
         if seal_cache is None:
             seal_cache = weights_sealed
         self.seal_cache = seal_cache
+        if verify and not (weights_sealed or seal_cache):
+            raise ValueError("verify=True needs sealed weights and/or a "
+                             "sealed cache — there is nothing to MAC")
+        self.verify = verify
+        if weights_sealed and verify and not seal.verify:
+            seal = dataclasses.replace(seal, verify=True)
+        self.seal = seal
+        self.watchdog = watchdog
+        self.max_run_steps = max_run_steps
+        self.fault_hooks = tuple(fault_hooks)
 
         if weights_sealed:
             self.sealed = SS.seal_params(params, seal, key_bytes)
@@ -112,7 +128,25 @@ class ServeEngine:
             _materialize = lambda p: p
             self._params_arg = params
 
-        cache_seal = SS.cache_seal_config(key_bytes) if seal_cache else None
+        if weights_sealed and verify:
+            meta = self.sealed
+
+            def _weight_verify(tensors):
+                sp = SS.SealedParams(tensors, meta.plans, meta.treedef,
+                                     meta.seal)
+                return SS.verify_params(sp, key_bytes)
+
+            # the weight image is immutable device state during serving, so
+            # it gets its own jitted MAC sweep (fail-stop) at drain entry
+            # rather than being re-hashed inside every chunk/decode dispatch
+            self._wverify = jax.jit(_weight_verify)
+        else:
+            self._wverify = None
+        self._has_wverify = self._wverify is not None
+        self._wswept = False
+
+        cache_seal = (SS.cache_seal_config(key_bytes, verify=verify)
+                      if seal_cache else None)
         self._decode_fn = ST.make_decode_tick(cfg, _materialize, cache_seal)
         self._chunk_fn = ST.make_chunk_step(cfg, _materialize, cache_seal)
         self._decode = _jit(self._decode_fn, (1, 2))
@@ -156,6 +190,7 @@ class ServeEngine:
         self.stats = {
             "prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
             "tokens": 0, "cow_copies": 0,
+            "mac_checks": 0, "mac_failures": 0, "retries": 0,
             "shared_prefix_blocks": 0, "shared_prefix_tokens": 0,
             "fused_matmul_leaves": (len(self.sealed.fused_paths())
                                     if self.sealed else 0),
@@ -192,8 +227,14 @@ class ServeEngine:
     def step(self) -> List[Request]:
         """Admit what fits, run one prefill chunk for admitted-but-pending
         prompts, advance every decoding slot one token; returns the
-        requests that completed during this step."""
+        requests that completed during this step. Registered fault hooks
+        fire first — they model an adversary mutating the sealed memory
+        image between dispatches."""
         n0 = len(self._done)
+        for hook in self.fault_hooks:
+            hook.on_step(self)
+        if not self._wswept:
+            self._verify_weights()
         self._admit()
         if any(p is not None for p in self._pending):
             self._chunk_tick()
@@ -202,17 +243,34 @@ class ServeEngine:
             self._decode_tick()
         return self._done[n0:]
 
-    def run(self) -> List[Request]:
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
         """Drain queue + in-flight work; returns the requests completed by
-        this call (admission order can overtake across chunk schedules)."""
+        this call (admission order can overtake across chunk schedules).
+
+        Guards: ``max_steps`` (or the engine-level ``max_run_steps``)
+        bounds the scheduler steps, and an attached ``StepWatchdog`` gets
+        each step's wall-clock duration — either blowing raises
+        ``StragglerTimeout`` instead of spinning forever on a stuck or
+        pathologically slow drain."""
         n0 = len(self._done)
+        limit = max_steps if max_steps is not None else self.max_run_steps
+        self._verify_weights()          # fail-stop sweep at drain entry
+        steps = 0
         while self.busy:
             before = (len(self.queue), self.stats["decode_steps"],
                       self.stats["prefills"])
+            t0 = time.time()
             self.step()
             after = (len(self.queue), self.stats["decode_steps"],
                      self.stats["prefills"])
             assert after != before, "scheduler made no progress"
+            steps += 1
+            if self.watchdog is not None:
+                self.watchdog.check(time.time() - t0)
+            if limit is not None and steps >= limit and self.busy:
+                raise StragglerTimeout(
+                    f"serve drain exceeded {limit} steps with work still "
+                    f"in flight ({len(self.queue)} queued)")
         return self._done[n0:]
 
     def check_device_mirror(self):
@@ -238,6 +296,7 @@ class ServeEngine:
             width = min(self._admit_n, len(free_slots))
             batch: List[tuple] = []
             cow_pairs: List[tuple] = []
+            cow_slots: List[int] = []
             for r in list(self.queue):
                 if len(batch) >= width:
                     break
@@ -271,6 +330,7 @@ class ServeEngine:
                 self._last_tok[slot] = 0
                 if partial is not None:
                     cow_pairs.append((partial[0], priv[0]))
+                    cow_slots.append(slot)
                     self.stats["cow_copies"] += 1
                 self.stats["shared_prefix_blocks"] += (
                     len(full) + (1 if partial else 0))
@@ -304,9 +364,22 @@ class ServeEngine:
                 for i, (s_b, d_b) in enumerate(cow_pairs):
                     src[i], dst[i], msk[i] = s_b, d_b, True
                     self._wc[d_b] += 1
-                self._pools, self._state = self._cow_t(
+                self._pools, self._state, cok = self._cow_t(
                     self._pools, self._state, jnp.asarray(src),
                     jnp.asarray(dst), jnp.asarray(msk))
+                if self.verify and self.seal_cache:
+                    self.stats["mac_checks"] += len(cow_pairs)
+                    if not bool(cok):
+                        # a shared source block failed its MAC: the copy
+                        # would launder tampered content under a fresh tag,
+                        # so drop the donor chains and retry the sharers
+                        if self._registry is not None:
+                            self._registry.purge_blocks(
+                                [s for s, _ in cow_pairs])
+                        for _, _, _, _, held in batch:
+                            self._alloc.decref(held)
+                        self._integrity_retry(cow_slots)
+                        continue
             for _, _, _, _, held in batch:
                 self._alloc.decref(held)   # slot refs live in _slot_blocks
 
@@ -329,20 +402,27 @@ class ServeEngine:
             toks[i, :n] = pend[:n]
             cl[i] = n
             fin[i] = n == len(pend)
-        tok, self._state, self._pools = self._chunk(
+        tok, cok, self._state, self._pools = self._chunk(
             self._params_arg, self._pools, self._state, jnp.asarray(sl),
             jnp.asarray(toks), jnp.asarray(cl), jnp.asarray(fin))
         self.stats["prefills"] += 1
         self.stats["prefill_chunks"] += len(rows)
         tok = np.asarray(tok)
+        cok_h = self._check_integrity(cok, len(rows))
         finished: List[int] = []
+        failed: List[int] = []
         for i, slot in enumerate(rows):
             n = int(cl[i])
             r = self._active[slot]
             length = int(self._lengths[slot])
+            # mirror the device's bumps whether or not the slot failed —
+            # the mirror tracks what the dispatch DID, not what we trust
             for b in range(length // bs, (length + n - 1) // bs + 1):
                 self._wc[self._tables[slot, b]] += 1
             self._lengths[slot] += n
+            if cok_h is not None and not cok_h[slot]:
+                failed.append(slot)
+                continue
             if not fin[i]:
                 self._pending[slot] = self._pending[slot][n:]
                 continue
@@ -356,6 +436,8 @@ class ServeEngine:
             self.stats["tokens"] += 1
             if len(r.out) >= self._mt_eff(r) or nt == r.eos:
                 finished.append(slot)
+        if failed:
+            self._integrity_retry(failed)
         if finished:
             self._evict_slots(finished)
 
@@ -365,41 +447,114 @@ class ServeEngine:
         return (self._params_arg, self._pools, self._state)
 
     def _decode_tick(self):
-        tok, self._state, self._pools = self._decode(*self._decode_args())
+        tok, cok, self._state, self._pools = self._decode(
+            *self._decode_args())
         self.stats["decode_steps"] += 1
         tok = np.asarray(tok)                  # the ONLY d2h copy per tick
+        n_running = sum(1 for i, r in enumerate(self._active)
+                        if r is not None and self._pending[i] is None)
+        cok_h = self._check_integrity(cok, n_running)
         bs = self.block_size
         finished: List[int] = []
+        failed: List[int] = []
         for slot, r in enumerate(self._active):
             if r is None or self._pending[slot] is not None:
                 continue
             # mirror the device's seal-on-write counter bump of the tail
-            # block the new K/V token landed in
+            # block the new K/V token landed in — for failed slots too:
+            # the mirror tracks what the dispatch did, not what we trust
             pb = self._tables[slot, self._lengths[slot] // bs]
             self._wc[pb] += 1
             self._lengths[slot] += 1
             self._counts[slot] += 1
+            if cok_h is not None and not cok_h[slot]:
+                failed.append(slot)
+                continue
             nt = int(tok[slot])
             self._last_tok[slot] = nt
             r.out.append(nt)
             self.stats["tokens"] += 1
             if len(r.out) >= self._mt_eff(r) or nt == r.eos:
                 finished.append(slot)
+        if failed:
+            self._integrity_retry(failed)
         if finished:
             self._evict_slots(finished)
 
-    def _evict_slots(self, slots: List[int]):
+    # -------------------------------------------------- integrity
+
+    def _verify_weights(self):
+        """Full MAC sweep over the sealed weight image, as its OWN jitted
+        dispatch (tracing it into every chunk/decode graph would price each
+        tick with a whole-model hash for an image that is immutable device
+        state during serving). Runs at ``run()`` entry and lazily once per
+        engine via ``step()``; failure is fail-stop — the model is not
+        trustworthy and no per-request recovery is possible."""
+        self._wswept = True
+        if not (self.verify and self._has_wverify):
+            return
+        self.stats["mac_checks"] += 1
+        if not bool(self._wverify(self._params_arg)):
+            self.stats["mac_failures"] += 1
+            raise SealedIntegrityError(
+                "weights", "sealed weight image failed its MAC sweep — "
+                "fail-stop, the model is not trustworthy")
+
+    def _check_integrity(self, cok, n_checked: int):
+        """Post-dispatch cache verdict handling: failures come back per
+        slot for targeted recovery. Returns the host cache-verdict array,
+        or None when verification is off (verdicts are traced constants).
+        Weight integrity is handled separately in ``_verify_weights``."""
+        if not self.verify:
+            return None
+        self.stats["mac_checks"] += n_checked
+        return np.asarray(cok)
+
+    def _integrity_retry(self, slots: List[int]):
+        """Graceful degradation for cache MAC failures: fail ONLY the
+        owning slots. Their registry chains are purged (a tampered shared
+        block must not be re-served), their blocks are released, the
+        device write counters are resynced from the trusted host mirror
+        (counter rollback tampers the device array only), and each victim
+        is re-prefilled once from the queue front under fresh counters;
+        a second failure marks the request ``error="integrity"``. Slots
+        that passed their check are untouched and decode bit-identically
+        through the recovery."""
+        self.stats["mac_failures"] += len(slots)
+        victims = [self._active[s] for s in slots]
+        if self._registry is not None:
+            bad = [b for s in slots for b in self._slot_blocks[s]]
+            self._registry.purge_blocks(bad)
+        self._evict_slots(slots, complete=False)
+        self._state = dataclasses.replace(
+            self._state, wc=jnp.asarray(self._wc))
+        for r in reversed(victims):
+            if r.retries >= 1:
+                r.error = "integrity"
+                r.done = True
+                r.t_done = time.time()
+                self._done.append(r)
+                continue
+            r.retries += 1
+            r.out = []
+            self.stats["retries"] += 1
+            self.queue.insert(0, r)
+
+    def _evict_slots(self, slots: List[int], complete: bool = True):
         """Batched slot teardown: one device evict dispatch zeroes the
         finished rows; the host drops block references (shared blocks
-        survive while the registry or another reader holds them)."""
+        survive while the registry or another reader holds them). With
+        ``complete=False`` the requests are NOT marked done — the caller
+        owns their fate (integrity retry / requeue)."""
         ids = np.full((self.slots,), self.slots, np.int32)
         ids[:len(slots)] = slots
         self._state = self._evict_t(self._state, jnp.asarray(ids))
         for slot in slots:
             r = self._active[slot]
-            r.done = True
-            r.t_done = time.time()
-            self._done.append(r)
+            if complete:
+                r.done = True
+                r.t_done = time.time()
+                self._done.append(r)
             self._alloc.decref(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
             self._tables[slot] = 0

@@ -117,11 +117,13 @@ def make_evict():
 
 def make_cow(cfg: ModelConfig, cache_seal):
     """Jitted copy-on-write: duplicate pool blocks src -> dst (re-keyed in
-    flight for sealed pools) and bump the destination write counters."""
+    flight for sealed pools) and bump the destination write counters.
+    Returns (pools, state, ok) — ok goes False if a verified source block
+    fails its MAC (always True without cache verification)."""
     def cow(pools, state: SchedState, src, dst, mask):
-        pools, wc = PG.copy_blocks(cfg, cache_seal, pools, state.wc,
-                                   src, dst, mask)
-        return pools, dataclasses.replace(state, wc=wc)
+        pools, wc, ok = PG.copy_blocks(cfg, cache_seal, pools, state.wc,
+                                       src, dst, mask)
+        return pools, dataclasses.replace(state, wc=wc), ok
     return cow
 
 
@@ -129,7 +131,16 @@ def make_chunk_step(cfg: ModelConfig, materialize, cache_seal):
     """Jitted chunked-prefill step: run one fixed-width chunk for up to A
     slots (gathered by slot id; padded rows have chunk_len == 0 and write
     nothing), seal the chunk's K/V into the slots' blocks, and on each
-    row's final chunk sample the request's first token."""
+    row's final chunk sample the request's first token.
+
+    Returns (tok, cok, state, pools): ``cok`` is the (S,) per-slot cache
+    integrity verdict — failed rows of the gather scatter back True so
+    untouched slots read clean. It is a traced constant when cache
+    verification is off, so the no-verify graph is unchanged. (The weight
+    image is verified in its own dispatch — ``ServeEngine._verify_weights``
+    — not here: it is immutable during serving, and re-hashing every
+    weight inside every tick would price each step without changing the
+    trust story.)"""
     def chunk_step(tensors, pools, state: SchedState, slot_ids, tokens,
                    chunk_len, is_final):
         params = materialize(tensors)
@@ -137,9 +148,9 @@ def make_chunk_step(cfg: ModelConfig, materialize, cache_seal):
         sl = jnp.minimum(slot_ids, s - 1)
         tables = state.tables[sl]
         lengths = state.lengths[sl]
-        logits, updates = PG.chunk_logits(cfg, params, pools, tables,
-                                          lengths, state.wc, tokens,
-                                          chunk_len, cache_seal)
+        logits, updates, okr = PG.chunk_logits(cfg, params, pools, tables,
+                                               lengths, state.wc, tokens,
+                                               chunk_len, cache_seal)
         pools, wc = PG.append_tokens(cfg, cache_seal, pools, updates,
                                      tables, lengths, chunk_len, state.wc)
         keys = SM.fold_token_keys(state.key_data[sl],
@@ -148,6 +159,7 @@ def make_chunk_step(cfg: ModelConfig, materialize, cache_seal):
                                state.topk[sl], state.topp[sl])
         tok = jnp.where(is_final, tok, 0)
         fin = lambda v: jnp.where(is_final, v, 0)
+        cok = jnp.ones((s,), bool).at[slot_ids].set(okr, mode="drop")
         state = dataclasses.replace(
             state,
             wc=wc,
@@ -157,22 +169,24 @@ def make_chunk_step(cfg: ModelConfig, materialize, cache_seal):
                 fin(jnp.ones_like(chunk_len)), mode="drop"),
             last_tok=state.last_tok.at[slot_ids].set(fin(tok), mode="drop"),
         )
-        return tok, state, pools
+        return tok, cok, state, pools
     return chunk_step
 
 
 def make_decode_tick(cfg: ModelConfig, materialize, cache_seal):
     """Jitted whole-batch decode tick: one dispatch advances every running
     slot a token — logits over the paged view, sealed tail-block append,
-    per-request sampling — and returns the (S,) sampled tokens, the ONLY
-    array that crosses back to the host per tick. Non-running slots have
-    chunk counts 0: they write nothing and keep their state."""
+    per-request sampling. Non-running slots have chunk counts 0: they write
+    nothing and keep their state.
+
+    Returns (tok, cok, state, pools) — see ``make_chunk_step``; only
+    tok/cok cross back to the host per tick."""
     def tick(tensors, pools, state: SchedState):
         params = materialize(tensors)
         tokens = state.last_tok[:, None]
-        logits, updates = PG.decode_logits(cfg, params, pools, state.tables,
-                                           state.lengths, state.wc, tokens,
-                                           cache_seal)
+        logits, updates, cok = PG.decode_logits(cfg, params, pools,
+                                                state.tables, state.lengths,
+                                                state.wc, tokens, cache_seal)
         cnt = state.run.astype(jnp.int32)
         pools, wc = PG.append_tokens(cfg, cache_seal, pools, updates,
                                      state.tables, state.lengths, cnt,
@@ -181,13 +195,14 @@ def make_decode_tick(cfg: ModelConfig, materialize, cache_seal):
         tok = SM.sample_logits(logits, keys, state.temp, state.topk,
                                state.topp)
         tok = jnp.where(state.run, tok, state.last_tok)
+        cok = cok | ~state.run            # only running slots can fail
         state = dataclasses.replace(
             state, wc=wc,
             lengths=state.lengths + cnt,
             counts=state.counts + cnt,
             last_tok=tok,
         )
-        return tok, state, pools
+        return tok, cok, state, pools
     return tick
 
 
@@ -209,8 +224,8 @@ def make_paged_decode_step(cfg: ModelConfig, materialize, cache_seal):
     def decode_step(tensors, pools, tables, lengths, wc, tokens, key_data,
                     counts, temperature, top_k, top_p):
         params = materialize(tensors)
-        logits, updates = PG.decode_logits(cfg, params, pools, tables,
-                                           lengths, wc, tokens, cache_seal)
+        logits, updates, _ = PG.decode_logits(cfg, params, pools, tables,
+                                              lengths, wc, tokens, cache_seal)
         pools = PG.apply_paged_updates(cfg, cache_seal, pools, updates,
                                        tables, lengths, wc)
         keys = SM.fold_token_keys(key_data, counts)

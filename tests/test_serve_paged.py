@@ -50,7 +50,7 @@ def _paged_teacher_forced(cfg, params, toks, seal):
     lengths = np.full((b,), PLEN, np.int32)
     for t in range(STEPS):
         step_tok = toks[:, PLEN + t][:, None]
-        logits, updates = PG.decode_logits(
+        logits, updates, _ = PG.decode_logits(
             cfg, params, pools, jnp.asarray(tables), jnp.asarray(lengths),
             jnp.asarray(wc), step_tok, seal)
         pools = PG.apply_paged_updates(
@@ -186,8 +186,9 @@ def test_chunked_prefill_matches_one_shot_exactly(sealed):
         chunk = np.zeros((b, chunk_w), np.int32)
         chunk[:, :n] = toks[:, off:off + n]
         cl = jnp.full((b,), n, jnp.int32)
-        last, ups = PG.chunk_logits(cfg, params, pools, jnp.asarray(tables),
-                                    lengths, wc, jnp.asarray(chunk), cl, seal)
+        last, ups, _ = PG.chunk_logits(cfg, params, pools,
+                                       jnp.asarray(tables), lengths, wc,
+                                       jnp.asarray(chunk), cl, seal)
         pools, wc = PG.append_tokens(cfg, seal, pools, ups,
                                      jnp.asarray(tables), lengths, cl, wc)
         lengths = lengths + cl
